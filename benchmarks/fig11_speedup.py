@@ -1,0 +1,29 @@
+"""Paper Fig. 11: SAL-PIM speedup vs GPU by input/output size.
+
+Claims: max 4.72x (in=32, out=128); average 1.83x.
+"""
+import itertools
+import numpy as np
+from repro.pimsim.gpt2 import Gpt2Medium, text_generation_cost
+from repro.pimsim.gpu_model import GpuConfig, text_generation_time
+from repro.pimsim.hbm import SalPimConfigHW
+
+
+def run():
+    m, gpu, hw = Gpt2Medium(), GpuConfig(), SalPimConfigHW(p_sub=4)
+    rows, grid = [], {}
+    for ni, no in itertools.product((32, 64, 128),
+                                    (1, 2, 4, 8, 16, 32, 64, 128, 256)):
+        tp = text_generation_cost(hw, m, ni, no)["total_s"]
+        tg = text_generation_time(gpu, m, ni, no)["total_s"]
+        grid[(ni, no)] = tg / tp
+    for (ni, no) in [(32, 1), (32, 128), (32, 256), (64, 128), (128, 128)]:
+        rows.append((f"fig11.speedup.in{ni}.out{no}", 0.0,
+                     f"{grid[(ni,no)]:.2f}x"))
+    rows.append(("fig11.claim.speedup_32_128", 0.0,
+                 f"{grid[(32,128)]:.2f}x_paper_4.72x"))
+    rows.append(("fig11.claim.avg_speedup", 0.0,
+                 f"{np.mean(list(grid.values())):.2f}x_paper_1.83x"))
+    rows.append(("fig11.claim.max_speedup", 0.0,
+                 f"{max(grid.values()):.2f}x_at_{max(grid, key=grid.get)}"))
+    return rows

@@ -1,0 +1,17 @@
+"""Paper Fig. 12 / Sec. 5.4: GEMV speedup vs bank-level PIM (Newton-like).
+
+Claim: min 1.75x for small vectors, approaching the 4x P_Sub bound for
+large vectors (12288 = GPT-3 scale hidden dim).
+"""
+from repro.pimsim.hbm import SalPimConfigHW
+from repro.pimsim.ops import gemv, gemv_banklevel
+
+
+def run():
+    hw = SalPimConfigHW(p_sub=4)
+    rows = []
+    for n in (512, 1024, 2048, 4096, 8192, 12288):
+        s = gemv_banklevel(hw, n, n).time_ns / gemv(hw, n, n).time_ns
+        rows.append((f"fig12.gemv_speedup.n{n}",
+                     gemv(hw, n, n).time_ns / 1e3, f"{s:.2f}x_vs_banklevel"))
+    return rows

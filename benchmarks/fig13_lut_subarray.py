@@ -1,0 +1,21 @@
+"""Paper Fig. 13 / Sec. 6.1: LUT-embedded subarray vs Scan vs Select.
+
+Claim: 3.57x over Select at vector size 16384; Scan is worst.
+"""
+from repro.pimsim.hbm import SalPimConfigHW
+from repro.pimsim.ops import lut_op
+
+
+def run():
+    hw = SalPimConfigHW(p_sub=4)
+    rows = []
+    for n in (1024, 4096, 16384):
+        base = lut_op(hw, n, mode="lut_subarray").time_ns
+        for mode in ("lut_subarray", "select", "scan"):
+            t = lut_op(hw, n, mode=mode).time_ns
+            rows.append((f"fig13.{mode}.n{n}", t / 1e3,
+                         f"{t/base:.2f}x_of_lut_subarray"))
+    n = 16384
+    r = lut_op(hw, n, mode="select").time_ns / lut_op(hw, n, mode="lut_subarray").time_ns
+    rows.append(("fig13.claim.speedup_at_16384", 0.0, f"{r:.2f}x_paper_3.57x"))
+    return rows

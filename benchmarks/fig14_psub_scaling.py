@@ -1,0 +1,20 @@
+"""Paper Fig. 14 / Sec. 6.2: execution time + avg bandwidth by P_Sub.
+
+Claim: P_Sub=4 is 2.11x faster than P_Sub=1 on text generation; average
+bandwidth roughly doubles (well under the 8 TB/s peak).
+"""
+from repro.pimsim.gpt2 import Gpt2Medium, text_generation_cost
+from repro.pimsim.hbm import SalPimConfigHW
+
+
+def run():
+    m = Gpt2Medium()
+    rows, times = [], {}
+    for p in (1, 2, 4):
+        r = text_generation_cost(SalPimConfigHW(p_sub=p), m, 32, 32)
+        times[p] = r["total_s"]
+        rows.append((f"fig14.exec_time.psub{p}", r["total_s"] * 1e6,
+                     f"bw={r['avg_bandwidth_gbps']:.0f}GBps"))
+    rows.append(("fig14.claim.psub4_vs_psub1", 0.0,
+                 f"{times[1]/times[4]:.2f}x_paper_2.11x"))
+    return rows

@@ -1,0 +1,20 @@
+"""Paper Fig. 15 / Sec. 6.2: average power by P_Sub (32-token generation).
+
+Claim: P_Sub=1 stays well under the 60 W HBM budget; P_Sub=4 exceeds it
+by ~24% (mitigable by clock/power gating, per the paper).
+"""
+from repro.pimsim.gpt2 import Gpt2Medium, average_power_w
+from repro.pimsim.hbm import SalPimConfigHW
+
+
+def run():
+    m = Gpt2Medium()
+    rows = []
+    for p in (1, 2, 4):
+        r = average_power_w(SalPimConfigHW(p_sub=p), m, 32, 32)
+        rows.append((f"fig15.avg_power.psub{p}", 0.0,
+                     f"{r['total_w']:.1f}W_over_budget_{100*r['over_budget_frac']:+.1f}%"))
+    r4 = average_power_w(SalPimConfigHW(p_sub=4), m, 32, 32)
+    rows.append(("fig15.claim.psub4_over_budget", 0.0,
+                 f"{100*r4['over_budget_frac']:+.1f}%_paper_+24.0%"))
+    return rows

@@ -1,0 +1,25 @@
+"""Paper Fig. 1: GPU execution time by input/output size (GPT-2 medium).
+
+Claim reproduced: time grows ~linearly with output size; input size has
+little impact (the generation stage dominates).
+"""
+from repro.pimsim.gpt2 import Gpt2Medium
+from repro.pimsim.gpu_model import GpuConfig, text_generation_time
+
+
+def run():
+    m, gpu = Gpt2Medium(), GpuConfig()
+    rows = []
+    for n_in in (32, 64, 128):
+        for n_out in (1, 32, 64, 128, 256):
+            t = text_generation_time(gpu, m, n_in, n_out)["total_s"]
+            rows.append((f"fig1.gpu_time.in{n_in}.out{n_out}", t * 1e6,
+                         f"{t*1e3:.2f}ms"))
+    # derived claims
+    t_out = [text_generation_time(gpu, m, 32, o)["total_s"] for o in (64, 128)]
+    rows.append(("fig1.claim.output_scaling_ratio", 0.0,
+                 f"{t_out[1]/t_out[0]:.2f}x_for_2x_output"))
+    t_in = [text_generation_time(gpu, m, i, 64)["total_s"] for i in (32, 128)]
+    rows.append(("fig1.claim.input_impact_ratio", 0.0,
+                 f"{t_in[1]/t_in[0]:.2f}x_for_4x_input"))
+    return rows

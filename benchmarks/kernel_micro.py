@@ -1,0 +1,58 @@
+"""Wall-clock microbenchmarks of the SAL-PIM ops (CPU reference path +
+interpret-mode kernels): LUT vs exact nonlinearities, decode attention,
+fixed-point GEMV. On-TPU numbers come from the same harness with
+impl='pallas'.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut as L
+from repro.core.nonlinear import Nonlinear
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=20, **kw):
+    fn(*args, **kw).block_until_ready()   # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    bank = L.LutBank.create(64)
+    nl_exact = Nonlinear.create("exact")
+    nl_lut = Nonlinear.create("lut")
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 1024))
+    rows = []
+
+    gelu_e = jax.jit(lambda v: jax.nn.gelu(v, approximate=True))
+    gelu_l = jax.jit(lambda v: L.apply_table(v, bank.gelu))
+    rows.append(("micro.gelu_exact.256x1024", _time(gelu_e, x), "cpu_jit"))
+    rows.append(("micro.gelu_lut.256x1024", _time(gelu_l, x), "cpu_jit"))
+
+    sm_e = jax.jit(lambda v: nl_exact.softmax(v))
+    sm_l = jax.jit(lambda v: nl_lut.softmax(v))
+    rows.append(("micro.softmax_exact.256x1024", _time(sm_e, x), "cpu_jit"))
+    rows.append(("micro.softmax_lut.256x1024", _time(sm_l, x), "cpu_jit"))
+
+    w = jax.random.normal(key, (1024, 1024)) * 0.05
+    xx = jax.random.normal(key, (8, 1024))
+    rows.append(("micro.gemv_ref.8x1024x1024",
+                 _time(lambda a: ops.pim_linear(a, w, impl="reference"), xx),
+                 "reference"))
+
+    B, H, Hkv, S, D = 4, 8, 2, 2048, 64
+    q = jax.random.normal(key, (B, H, D))
+    k = jax.random.normal(key, (B, Hkv, S, D))
+    v = jax.random.normal(key, (B, Hkv, S, D))
+    lens = jnp.full((B,), S, jnp.int32)
+    rows.append(("micro.decode_attn_ref.4x8x2048x64",
+                 _time(lambda a: ops.pim_decode_attention(a, k, v, lens,
+                                                          impl="reference"), q),
+                 "reference"))
+    return rows

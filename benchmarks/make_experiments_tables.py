@@ -1,0 +1,65 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from results/dryrun."""
+from __future__ import annotations
+
+import json
+import os
+
+DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "results", "dryrun")
+
+
+def fmt(x, unit=""):
+    if x >= 1:
+        return f"{x:.2f}{unit}"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}m{unit}"
+    if x >= 1e-6:
+        return f"{x*1e6:.1f}u{unit}"
+    return f"{x*1e9:.1f}n{unit}"
+
+
+def main():
+    rows = []
+    for fn in sorted(os.listdir(DIR)):
+        if not fn.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(DIR, fn)))
+        if "error" in r:
+            rows.append((fn, None))
+            continue
+        rows.append((fn, r))
+
+    print("| arch | shape | mesh | bottleneck | t_compute | t_memory | "
+          "t_collective | useful FLOPs | args+out/dev | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for fn, r in rows:
+        if r is None:
+            print(f"| {fn} | - | - | ERROR | | | | | | |")
+            continue
+        if r["mesh"] != "single":
+            continue
+        rf = r["roofline"]
+        m = r["memory"]
+        argsout = ((m["argument_bytes"] or 0) + (m["output_bytes"] or 0)) / 1e9
+        frac = (r["model_flops_global"]
+                / (r["devices"] * 197e12 * max(rf["t_bound"], 1e-12)))
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+              f"{rf['bottleneck']} | {fmt(rf['t_compute'],'s')} | "
+              f"{fmt(rf['t_memory'],'s')} | {fmt(rf['t_collective'],'s')} | "
+              f"{(r.get('useful_flops_ratio') or 0):.2f} | "
+              f"{argsout:.2f} GB | {frac:.3f} |")
+
+    print()
+    print("### Multi-pod (2x16x16 = 512 chips) compile check")
+    print()
+    print("| arch | shape | compile | collective bytes/dev |")
+    print("|---|---|---|---|")
+    for fn, r in rows:
+        if r is None or r["mesh"] != "multi":
+            continue
+        print(f"| {r['arch']} | {r['shape']} | ok ({r['compile_sec']:.0f}s) | "
+              f"{r['collectives']['total_bytes']/1e9:.2f} GB |")
+
+
+if __name__ == "__main__":
+    main()

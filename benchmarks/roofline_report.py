@@ -1,0 +1,27 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json)."""
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "dryrun")
+
+
+def run():
+    rows = []
+    if not os.path.isdir(RESULTS):
+        return [("roofline.missing", 0.0, "run_launch.dryrun_first")]
+    for fn in sorted(os.listdir(RESULTS)):
+        if not fn.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(RESULTS, fn)))
+        if "error" in r:
+            rows.append((f"roofline.{fn[:-5]}", 0.0, "ERROR"))
+            continue
+        rf = r["roofline"]
+        rows.append((
+            f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}",
+            rf["t_bound"] * 1e6,
+            f"bottleneck={rf['bottleneck']};useful_flops="
+            f"{(r.get('useful_flops_ratio') or 0):.3f}",
+        ))
+    return rows

@@ -1,0 +1,53 @@
+"""Benchmark runner: one harness per paper table/figure + kernel micro +
+roofline report. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig11,fig13]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import (fig1_gpu_exec_time, fig3_breakdown, fig4_lut_sections,
+                        fig11_speedup, fig12_gemv_vs_banklevel,
+                        fig13_lut_subarray, fig14_psub_scaling, fig15_power,
+                        kernel_micro,
+                        roofline_report)
+
+HARNESSES = {
+    "fig1": fig1_gpu_exec_time,
+    "fig3": fig3_breakdown,
+    "fig4": fig4_lut_sections,
+    "fig11": fig11_speedup,
+    "fig12": fig12_gemv_vs_banklevel,
+    "fig13": fig13_lut_subarray,
+    "fig14": fig14_psub_scaling,
+    "fig15": fig15_power,
+    "micro": kernel_micro,
+    "roofline": roofline_report,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated harness keys")
+    args = ap.parse_args()
+    keys = args.only.split(",") if args.only else list(HARNESSES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key in keys:
+        mod = HARNESSES[key]
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.3f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{key}.ERROR,0.0,{e!r}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

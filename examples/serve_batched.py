@@ -1,0 +1,47 @@
+#!/usr/bin/env python
+"""Continuous-batching serving demo: N requests stream through B decode
+slots (slot-based admission, per-request lengths, EOS release).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.core.salpim import SalPimConfig, SalPimEngine
+from repro.models import api
+from repro.serving.engine import GenConfig, ServingEngine
+
+
+def main():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    engine = SalPimEngine.create(SalPimConfig(nonlinear_mode="lut"))
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+
+    eng = ServingEngine(params, cfg, engine, slots=4, max_len=64,
+                        gen=GenConfig(temperature=0.0, stop_on_eos=False))
+    rng = np.random.RandomState(0)
+    uids = []
+    for i in range(10):
+        prompt = rng.randint(2, cfg.vocab, size=rng.randint(4, 12))
+        uids.append(eng.submit(prompt, max_new_tokens=int(rng.randint(5, 15))))
+    print(f"submitted {len(uids)} requests into 4 slots")
+
+    t0 = time.perf_counter()
+    steps = 0
+    while True:
+        n = eng.step()
+        steps += 1
+        if n == 0 and not eng.queue and all(a is None for a in eng.active):
+            break
+    dt = time.perf_counter() - t0
+    done = 0
+    # requests were popped from queue; count completions via step() bookkeeping
+    print(f"drained in {steps} decode steps, {dt:.2f}s "
+          f"({steps/dt:.1f} steps/s on CPU)")
+
+
+if __name__ == "__main__":
+    main()

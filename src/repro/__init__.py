@@ -1,0 +1,2 @@
+"""repro: SAL-PIM reproduced as a TPU-native multi-pod JAX framework."""
+__version__ = "1.0.0"

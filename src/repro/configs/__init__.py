@@ -1,0 +1,142 @@
+"""Architecture registry + assigned input shapes.
+
+Every assigned arch ships a `config()` (exact published dims) and a
+`smoke_config()` (same family/flavour, reduced size — CPU testable).
+Shapes follow the assignment; `long_500k` runs only where sub-quadratic /
+windowed structure exists (DESIGN.md §long_500k skip list).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "qwen2_1_5b",
+    "gemma2_2b",
+    "nemotron_4_340b",
+    "h2o_danube3_4b",
+    "whisper_large_v3",
+    "mamba2_370m",
+    "qwen2_vl_2b",
+    "zamba2_1_2b",
+    "olmoe_1b_7b",
+    "phi35_moe_42b",
+    "gpt2_medium",   # the paper's own evaluation model
+]
+
+# assignment ids -> module names
+ALIASES = {
+    "qwen2-1.5b": "qwen2_1_5b",
+    "gemma2-2b": "gemma2_2b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "h2o-danube-3-4b": "h2o_danube3_4b",
+    "whisper-large-v3": "whisper_large_v3",
+    "mamba2-370m": "mamba2_370m",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "gpt2-medium": "gpt2_medium",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# Archs allowed to run long_500k (sub-quadratic or windowed attention).
+LONG_CONTEXT_OK = {
+    "mamba2_370m",      # O(1) SSM state
+    "zamba2_1_2b",      # hybrid: SSM + shared-attn KV (sequence-sharded)
+    "gemma2_2b",        # alternating local(SWA)/global
+    "h2o_danube3_4b",   # SWA
+}
+# Pure full-attention archs skip long_500k (documented in DESIGN.md).
+LONG_CONTEXT_SKIP_REASON = {
+    "qwen2_1_5b": "pure full attention",
+    "nemotron_4_340b": "pure full attention",
+    "whisper_large_v3": "decoder context architecturally capped (448)",
+    "qwen2_vl_2b": "pure full attention",
+    "olmoe_1b_7b": "pure full attention",
+    "phi35_moe_42b": "pure full attention",
+    "gpt2_medium": "pure full attention (learned pos emb, 1024 cap)",
+}
+
+
+def normalize(name: str) -> str:
+    return ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str, smoke: bool = False, **overrides) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{normalize(name)}")
+    cfg = mod.smoke_config() if smoke else mod.config()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells. 40 total; 34 live."""
+    out = []
+    for arch in ARCHS:
+        if arch == "gpt2_medium":
+            continue  # paper model benchmarked separately, not an assigned cell
+        for shape in SHAPES.values():
+            skipped = (shape.name == "long_500k"
+                       and arch not in LONG_CONTEXT_OK)
+            if skipped and not include_skipped:
+                continue
+            out.append((arch, shape.name))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, *,
+                batch_override: Optional[int] = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    No device allocation — exactly the dry-run pattern. For train/prefill
+    the batch is the global batch; decode feeds one token per sequence.
+    """
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+    f = cfg.cdtype
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {
+            "tokens": sds((B, S), i32),
+            "labels": sds((B, S), i32),
+            "mask": sds((B, S), jnp.float32),
+        }
+        if cfg.family == "encdec":
+            specs["frames"] = sds((B, cfg.enc_seq, cfg.d_model), f)
+        if cfg.mrope_sections is not None:
+            specs["patch_embeds"] = sds((B, 256, cfg.d_model), f)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((B, S), i32)}
+        if cfg.family == "encdec":
+            specs["frames"] = sds((B, cfg.enc_seq, cfg.d_model), f)
+        if cfg.mrope_sections is not None:
+            specs["patch_embeds"] = sds((B, 256, cfg.d_model), f)
+        return specs
+    if shape.kind == "decode":
+        return {"token": sds((B,), i32)}
+    raise ValueError(shape.kind)

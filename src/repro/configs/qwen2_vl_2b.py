@@ -1,0 +1,30 @@
+"""Qwen2-VL-2B [arXiv:2409.12191; hf]: qwen2 backbone + M-RoPE (16,24,24).
+
+Vision frontend STUBBED: input_specs provides (B, 256, d) patch embeddings
+spliced over the first positions; dynamic-resolution patching is the
+frontend's job. Text-only M-RoPE reduces exactly to RoPE (tested).
+"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b", family="dense",
+        n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+        d_ff=8960, vocab=151936, head_dim=128,
+        qkv_bias=True, rope_theta=1_000_000.0, mrope_sections=(16, 24, 24),
+        activation="silu", gated_mlp=True, norm="rmsnorm",
+        tie_embeddings=True, max_seq=131072,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b-smoke", family="dense",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=160, vocab=512, head_dim=16,
+        qkv_bias=True, mrope_sections=(2, 3, 3),
+        activation="silu", gated_mlp=True, norm="rmsnorm",
+        param_dtype="float32", compute_dtype="float32",
+        max_seq=256, attn_chunk=32, remat="none",
+    )

@@ -1,0 +1,7 @@
+"""SAL-PIM's primary contribution as composable JAX modules.
+
+lut.py       — LUT-based linear interpolation tables + reference apply (C2)
+quant.py     — S-ALU 16-bit fixed-point / int8 datapaths (C1)
+nonlinear.py — switchable exact/LUT nonlinearity policy used by all models
+salpim.py    — the PIM-style linear/attention dispatch engine (C1+C3)
+"""

@@ -1,0 +1,267 @@
+"""LUT-based linear interpolation — SAL-PIM's C2 contribution.
+
+The paper stores per-section (slope W, intercept B) pairs in
+"LUT-embedded subarrays" and computes any non-linear function as
+
+    y = W[sec(x)] * x + B[sec(x)]
+
+with ``sec(x)`` produced by the bank-level decoding units (clamp + shift
+to the calibrated bit position). 64 sections preserve GPT-2-medium
+accuracy; >=32 sections show no drop (paper Sec. 2.3).
+
+This module builds the tables and provides the pure-jnp reference
+application. The Pallas kernel (kernels/lut_interp.py) consumes the same
+``LutTable``; on TPU the lookup is a one-hot (N,S) @ (S,2) matmul on the
+MXU — the TPU-native analogue of the per-MAT column-select circuit.
+
+Guard-section layout
+--------------------
+Tables carry ``sections + 2`` rows. Row 0 is the left guard, row S+1 the
+right guard; in-range x maps to rows 1..S. Guards encode the saturation
+behaviour (constant, identity, or extension of the boundary line) so the
+apply path stays branch-free — exactly the role of the paper's clamping
+decoder, which pins out-of-range inputs to the boundary section.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class LutTable:
+    """Piecewise-linear table for one scalar function.
+
+    wb: (sections + 2, 2) float32 — column 0 slope, column 1 intercept,
+        rows 0 and -1 are out-of-range guards.
+    lo/hi: calibrated interpolation range (the paper's "bit position").
+    """
+
+    name: str
+    lo: float
+    hi: float
+    wb: Array  # (S+2, 2)
+
+    # -- pytree plumbing (static metadata, dynamic table) ------------------
+    def tree_flatten(self):
+        return (self.wb,), (self.name, self.lo, self.hi)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        name, lo, hi = aux
+        return cls(name=name, lo=lo, hi=hi, wb=children[0])
+
+    @property
+    def sections(self) -> int:
+        return self.wb.shape[0] - 2
+
+    @property
+    def inv_step(self) -> float:
+        return self.sections / (self.hi - self.lo)
+
+    def astype(self, dtype) -> "LutTable":
+        return LutTable(self.name, self.lo, self.hi, self.wb.astype(dtype))
+
+
+def build_table(
+    fn: Callable[[np.ndarray], np.ndarray],
+    lo: float,
+    hi: float,
+    sections: int,
+    *,
+    name: str = "fn",
+    left: str | float = "line",
+    right: str | float = "line",
+    dtype=jnp.float32,
+) -> LutTable:
+    """Build (slope, intercept) rows connecting fn's values at section edges.
+
+    left/right: guard behaviour outside [lo, hi]:
+      "line"     — extend the boundary section's line,
+      "identity" — y = x (e.g. gelu/silu for large x),
+      float c    — y = c (e.g. exp underflow -> 0).
+    """
+    xs = np.linspace(lo, hi, sections + 1, dtype=np.float64)
+    ys = np.asarray(fn(xs), dtype=np.float64)
+    w = (ys[1:] - ys[:-1]) / (xs[1:] - xs[:-1])
+    b = ys[:-1] - w * xs[:-1]
+
+    def guard(spec, edge_w, edge_b):
+        if spec == "line":
+            return edge_w, edge_b
+        if spec == "identity":
+            return 1.0, 0.0
+        return 0.0, float(spec)
+
+    lw, lb = guard(left, w[0], b[0])
+    rw, rb = guard(right, w[-1], b[-1])
+    wb = np.stack(
+        [np.concatenate([[lw], w, [rw]]), np.concatenate([[lb], b, [rb]])],
+        axis=-1,
+    )
+    return LutTable(name=name, lo=float(lo), hi=float(hi), wb=jnp.asarray(wb, dtype))
+
+
+def section_index(x: Array, table: LutTable) -> Array:
+    """The 'decoding unit': map x to a guarded section row index."""
+    # floor((x - lo) * S / (hi - lo)) + 1, clamped into [0, S+1].
+    # f32 arithmetic regardless of input dtype — matches the kernels.
+    xf = x.astype(jnp.float32)
+    raw = jnp.floor((xf - table.lo) * table.inv_step).astype(jnp.int32) + 1
+    return jnp.clip(raw, 0, table.sections + 1)
+
+
+def apply_table(x: Array, table: LutTable) -> Array:
+    """Reference LUT interpolation: y = W[sec(x)] * x + B[sec(x)]."""
+    idx = section_index(x, table)
+    wb = table.wb.astype(jnp.float32)
+    w = wb[idx, 0]
+    b = wb[idx, 1]
+    return (w * x.astype(jnp.float32) + b).astype(x.dtype)
+
+
+def apply_table_onehot(x: Array, table: LutTable) -> Array:
+    """MXU-friendly variant: one-hot(sec(x)) @ wb. Same math as apply_table.
+
+    This is the form the Pallas kernel uses on TPU; exposed here so tests
+    can check gather-vs-matmul equivalence without entering the kernel.
+    """
+    idx = section_index(x, table)
+    onehot = jax.nn.one_hot(idx, table.sections + 2, dtype=jnp.float32)
+    wb = onehot.reshape(-1, table.sections + 2) @ table.wb.astype(jnp.float32)
+    wb = wb.reshape(*x.shape, 2)
+    return (wb[..., 0] * x.astype(jnp.float32) + wb[..., 1]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Standard tables for every non-linear function GPT (and the assigned zoo)
+# needs. Ranges are the calibrated "bit positions" per function.
+# ---------------------------------------------------------------------------
+
+def _np_gelu(x):
+    return 0.5 * x * (1.0 + np.tanh(np.sqrt(2.0 / np.pi) * (x + 0.044715 * x**3)))
+
+
+def _np_silu(x):
+    return x / (1.0 + np.exp(-x))
+
+
+def _np_softplus(x):
+    return np.log1p(np.exp(-np.abs(x))) + np.maximum(x, 0.0)
+
+
+def gelu_table(sections: int = 64) -> LutTable:
+    return build_table(_np_gelu, -8.0, 8.0, sections, name="gelu", left=0.0, right="identity")
+
+
+def silu_table(sections: int = 64) -> LutTable:
+    return build_table(_np_silu, -8.0, 8.0, sections, name="silu", left=0.0, right="identity")
+
+
+def exp_table(sections: int = 64, reach: float = 12.0) -> LutTable:
+    """exp on [-reach, 0]: softmax inputs are max-subtracted (S-ALU `max`)."""
+    return build_table(np.exp, -reach, 0.0, sections, name="exp", left=0.0, right="line")
+
+
+def tanh_table(sections: int = 64) -> LutTable:
+    return build_table(np.tanh, -4.0, 4.0, sections, name="tanh", left=-1.0, right=1.0)
+
+
+def softplus_table(sections: int = 64) -> LutTable:
+    return build_table(_np_softplus, -10.0, 10.0, sections, name="softplus", left=0.0, right="identity")
+
+
+def sigmoid_table(sections: int = 64) -> LutTable:
+    return build_table(lambda x: 1.0 / (1.0 + np.exp(-x)), -8.0, 8.0, sections,
+                       name="sigmoid", left=0.0, right=1.0)
+
+
+def recip_table(sections: int = 64) -> LutTable:
+    """1/m for mantissa m in [0.5, 1] — used with power-of-two range reduction."""
+    return build_table(lambda m: 1.0 / m, 0.5, 1.0, sections, name="recip")
+
+
+def rsqrt_table(sections: int = 64) -> LutTable:
+    """1/sqrt(m) for m in [0.25, 1] — covers both exponent parities."""
+    return build_table(lambda m: 1.0 / np.sqrt(m), 0.25, 1.0, sections, name="rsqrt")
+
+
+# ---------------------------------------------------------------------------
+# Range reduction ("the right shifters select the bit position"): reciprocal
+# and rsqrt have unbounded useful range, so the paper shifts inputs to the
+# calibrated window. In float we do the same with exponent extraction.
+# ---------------------------------------------------------------------------
+
+def _frexp(x: Array) -> tuple[Array, Array]:
+    """x = m * 2**e with m in [0.5, 1). Positive finite x only."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    e = ((bits >> 23) & 0xFF) - 126
+    m = jax.lax.bitcast_convert_type(
+        (bits & jnp.int32(0x007FFFFF)) | jnp.int32(0x3F000000), jnp.float32
+    )
+    return m, e
+
+
+def lut_reciprocal(x: Array, table: LutTable) -> Array:
+    """1/x via LUT on the mantissa: 1/x = (1/m) * 2**-e. x > 0."""
+    xf = x.astype(jnp.float32)
+    m, e = _frexp(xf)
+    r = apply_table(m, table)
+    out = r * jnp.exp2(-e.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def lut_rsqrt(x: Array, table: LutTable) -> Array:
+    """1/sqrt(x) via LUT: fold exponent parity into a [0.25, 1) mantissa."""
+    xf = x.astype(jnp.float32)
+    m, e = _frexp(xf)
+    odd = (e & 1) == 1
+    m2 = jnp.where(odd, m * 0.5, m)          # m2 in [0.25, 1)
+    e2 = jnp.where(odd, e + 1, e)            # even
+    r = apply_table(m2, table)
+    out = r * jnp.exp2(-(e2 // 2).astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+DEFAULT_SECTIONS = 64  # paper Table 2
+
+
+@dataclasses.dataclass(frozen=True)
+class LutBank:
+    """All tables one model needs — the 'LUT-embedded subarrays' content."""
+
+    gelu: LutTable
+    silu: LutTable
+    exp: LutTable
+    tanh: LutTable
+    softplus: LutTable
+    sigmoid: LutTable
+    recip: LutTable
+    rsqrt: LutTable
+
+    @classmethod
+    def create(cls, sections: int = DEFAULT_SECTIONS) -> "LutBank":
+        return cls(
+            gelu=gelu_table(sections),
+            silu=silu_table(sections),
+            exp=exp_table(sections),
+            tanh=tanh_table(sections),
+            softplus=softplus_table(sections),
+            sigmoid=sigmoid_table(sections),
+            recip=recip_table(sections),
+            rsqrt=rsqrt_table(sections),
+        )
+
+
+jax.tree_util.register_pytree_node(
+    LutBank,
+    lambda b: (tuple(getattr(b, f.name) for f in dataclasses.fields(b)), None),
+    lambda _, ch: LutBank(*ch),
+)

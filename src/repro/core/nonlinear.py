@@ -1,0 +1,140 @@
+"""Non-linear ops with a switchable policy: exact jnp vs SAL-PIM LUT path.
+
+Models never call jnp.exp / jax.nn.gelu directly — they go through a
+`Nonlinear` policy so the same model runs (a) exactly, (b) with the
+paper's 64-section LUT interpolation, or (c) with the Pallas kernels on
+TPU. Softmax follows the paper's PIM flow precisely:
+
+    max (S-ALU max op) -> subtract -> LUT exp -> reduce-sum (C-ALU)
+    -> LUT reciprocal (range-reduced) -> multiply
+
+LayerNorm likewise uses the LUT rsqrt (reduce in S-ALU/C-ALU, LUT for the
+reciprocal square root — paper Sec. 3.2.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut as lut_lib
+from repro.core.lut import LutBank, LutTable
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Nonlinear:
+    """Policy object. mode: 'exact' | 'lut'."""
+
+    mode: str = "exact"
+    bank: LutBank | None = None
+    sections: int = lut_lib.DEFAULT_SECTIONS
+
+    @classmethod
+    def create(cls, mode: str = "exact", sections: int = lut_lib.DEFAULT_SECTIONS) -> "Nonlinear":
+        bank = LutBank.create(sections) if mode == "lut" else None
+        return cls(mode=mode, bank=bank, sections=sections)
+
+    # -- scalar activations -------------------------------------------------
+    def gelu(self, x: Array) -> Array:
+        if self.mode == "lut":
+            return lut_lib.apply_table(x, self.bank.gelu)
+        return jax.nn.gelu(x, approximate=True)
+
+    def silu(self, x: Array) -> Array:
+        if self.mode == "lut":
+            return lut_lib.apply_table(x, self.bank.silu)
+        return jax.nn.silu(x)
+
+    def tanh(self, x: Array) -> Array:
+        if self.mode == "lut":
+            return lut_lib.apply_table(x, self.bank.tanh)
+        return jnp.tanh(x)
+
+    def sigmoid(self, x: Array) -> Array:
+        if self.mode == "lut":
+            return lut_lib.apply_table(x, self.bank.sigmoid)
+        return jax.nn.sigmoid(x)
+
+    def softplus(self, x: Array) -> Array:
+        if self.mode == "lut":
+            return lut_lib.apply_table(x, self.bank.softplus)
+        return jax.nn.softplus(x)
+
+    def exp_neg(self, x: Array) -> Array:
+        """exp for max-subtracted inputs (x <= 0)."""
+        if self.mode == "lut":
+            return lut_lib.apply_table(x, self.bank.exp)
+        return jnp.exp(x)
+
+    def reciprocal_pos(self, x: Array) -> Array:
+        """1/x for x > 0 (softmax denominators, LN variances)."""
+        if self.mode == "lut":
+            return lut_lib.lut_reciprocal(x, self.bank.recip)
+        return 1.0 / x
+
+    def rsqrt_pos(self, x: Array) -> Array:
+        if self.mode == "lut":
+            return lut_lib.lut_rsqrt(x, self.bank.rsqrt)
+        return jax.lax.rsqrt(x)
+
+    def squared_relu(self, x: Array) -> Array:
+        # Polynomial — exact in one S-ALU mul either way (nemotron-4).
+        r = jnp.maximum(x, 0.0)
+        return r * r
+
+    def activation(self, kind: str):
+        return {
+            "gelu": self.gelu,
+            "silu": self.silu,
+            "squared_relu": self.squared_relu,
+            "tanh": self.tanh,
+        }[kind]
+
+    # -- composite ops ------------------------------------------------------
+    def softmax(self, x: Array, axis: int = -1, where: Array | None = None) -> Array:
+        """PIM-flow softmax: max -> LUT exp -> sum -> LUT recip -> mul."""
+        if where is not None:
+            x = jnp.where(where, x, -jnp.inf)
+        m = jnp.max(x, axis=axis, keepdims=True)
+        m = jnp.where(jnp.isfinite(m), m, 0.0)  # fully-masked rows
+        e = self.exp_neg(x - m)
+        if where is not None:
+            e = jnp.where(where, e, 0.0)
+        s = jnp.sum(e, axis=axis, keepdims=True)
+        return e * self.reciprocal_pos(jnp.maximum(s, 1e-9))
+
+    def layernorm(self, x: Array, gamma: Array, beta: Array | None, eps: float = 1e-5) -> Array:
+        xf = x.astype(jnp.float32)
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        xc = xf - mean
+        var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+        inv = self.rsqrt_pos(var + eps)
+        out = xc * inv * gamma.astype(jnp.float32)
+        if beta is not None:
+            out = out + beta.astype(jnp.float32)
+        return out.astype(x.dtype)
+
+    def rmsnorm(self, x: Array, gamma: Array, eps: float = 1e-6, *, plus_one: bool = False) -> Array:
+        xf = x.astype(jnp.float32)
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        inv = self.rsqrt_pos(ms + eps)
+        g = gamma.astype(jnp.float32)
+        if plus_one:  # gemma-style (1 + weight)
+            g = 1.0 + g
+        return (xf * inv * g).astype(x.dtype)
+
+    def softcap(self, x: Array, cap: float) -> Array:
+        """Gemma-2 logit soft-capping: cap * tanh(x / cap) via LUT tanh."""
+        return cap * self.tanh(x / cap)
+
+
+EXACT = Nonlinear.create("exact")
+
+
+@partial(jax.jit, static_argnames=("axis",))
+def softmax_exact(x: Array, axis: int = -1) -> Array:
+    return EXACT.softmax(x, axis=axis)

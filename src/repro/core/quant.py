@@ -1,0 +1,147 @@
+"""Fixed-point arithmetic matching SAL-PIM's S-ALU datapath.
+
+The S-ALU (paper Sec. 4.1) uses 16-bit fixed-point MACs with 16x32-bit
+accumulation registers; results are right-shifted by the fraction width
+and truncated back to 16 bits before being driven onto the GBLs. The
+paper measures ~2.8% LAMBADA degradation for GPT-2-medium at Q16.
+
+Two paths:
+  * Q-format int16 (faithful): `QFormat`, `fixed_gemv` — int32 MAC,
+    arithmetic right shift, saturating truncation. Validated against
+    float references in tests; used by the interpret-mode Pallas kernel.
+  * int8 + per-row scale (TPU-optimized): `quantize_int8_rowwise` — the
+    MXU-native equivalent (int8 x int8 -> int32). Documented deviation in
+    DESIGN.md: TPU has no int16 MXU mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+I16_MIN = -32768
+I16_MAX = 32767
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Qm.f fixed point in `bits` total (default S-ALU: 16-bit)."""
+
+    frac_bits: int
+    bits: int = 16
+
+    @property
+    def scale(self) -> float:
+        return float(1 << self.frac_bits)
+
+    @property
+    def min_int(self) -> int:
+        return -(1 << (self.bits - 1))
+
+    @property
+    def max_int(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    def quantize(self, x: Array) -> Array:
+        q = jnp.round(x.astype(jnp.float32) * self.scale)
+        return jnp.clip(q, self.min_int, self.max_int).astype(jnp.int16 if self.bits == 16 else jnp.int32)
+
+    def dequantize(self, q: Array) -> Array:
+        return q.astype(jnp.float32) / self.scale
+
+
+# Default S-ALU formats: weights/activations Q6.10-ish works well for LN'd
+# transformer activations; kept configurable per tensor.
+DEFAULT_WEIGHT_Q = QFormat(frac_bits=12)
+DEFAULT_ACT_Q = QFormat(frac_bits=10)
+
+
+def requantize_i32_to_i16(acc: Array, shift: int) -> Array:
+    """The S-ALU writeback: arithmetic right shift + saturate to int16."""
+    shifted = jnp.right_shift(acc, shift)
+    return jnp.clip(shifted, I16_MIN, I16_MAX).astype(jnp.int16)
+
+
+def fixed_gemv(w_q: Array, x_q: Array, *, shift: int) -> Array:
+    """int16 W (R, C) @ int16 x (C,) -> int16 (R,) with int32 accumulation.
+
+    Mirrors one S-ALU pass: MAC into 32-bit registers, then shift-truncate.
+    """
+    acc = jnp.einsum(
+        "rc,c->r",
+        w_q.astype(jnp.int32),
+        x_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return requantize_i32_to_i16(acc, shift)
+
+
+def fixed_linear(
+    x: Array,
+    w_q: Array,
+    b_q: Array | None,
+    *,
+    w_fmt: QFormat = DEFAULT_WEIGHT_Q,
+    x_fmt: QFormat = DEFAULT_ACT_Q,
+    out_fmt: QFormat = DEFAULT_ACT_Q,
+) -> Array:
+    """Float-in/float-out wrapper over the fixed-point datapath.
+
+    x: (..., C) float; w_q int16 (R, C); b_q int32 in the accumulator scale
+    (w_fmt.frac_bits + x_fmt.frac_bits), matching the S-ALU's 32-bit bias add.
+    """
+    x_q = x_fmt.quantize(x)
+    acc_frac = w_fmt.frac_bits + x_fmt.frac_bits
+    acc = jnp.einsum(
+        "...c,rc->...r",
+        x_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    if b_q is not None:
+        acc = acc + b_q
+    out_q = requantize_i32_to_i16(acc, acc_frac - out_fmt.frac_bits)
+    return out_fmt.dequantize(out_q).astype(x.dtype)
+
+
+def quantize_weights_fixed(w: Array, fmt: QFormat = DEFAULT_WEIGHT_Q) -> Array:
+    return fmt.quantize(w)
+
+
+def quantize_bias_fixed(
+    b: Array, w_fmt: QFormat = DEFAULT_WEIGHT_Q, x_fmt: QFormat = DEFAULT_ACT_Q
+) -> Array:
+    scale = float(1 << (w_fmt.frac_bits + x_fmt.frac_bits))
+    return jnp.round(b.astype(jnp.float32) * scale).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# TPU-native int8 path (per-row symmetric scales).
+# ---------------------------------------------------------------------------
+
+def quantize_int8_rowwise(w: Array) -> tuple[Array, Array]:
+    """(R, C) float -> int8 (R, C) + float32 (R,) scales (symmetric)."""
+    absmax = jnp.max(jnp.abs(w), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    w_i8 = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return w_i8, scale[..., 0].astype(jnp.float32)
+
+
+def int8_linear(x: Array, w_i8: Array, scale: Array, b: Array | None = None) -> Array:
+    """x (..., C) float @ int8 W (R, C) with int32 accum, fp32 rescale."""
+    x_absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    x_scale = jnp.maximum(x_absmax, 1e-8) / 127.0
+    x_i8 = jnp.clip(jnp.round(x / x_scale), -127, 127).astype(jnp.int8)
+    acc = jnp.einsum(
+        "...c,rc->...r",
+        x_i8.astype(jnp.int32),
+        w_i8.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    out = acc.astype(jnp.float32) * x_scale * scale
+    if b is not None:
+        out = out + b
+    return out.astype(x.dtype)

@@ -1,0 +1,146 @@
+"""The SAL-PIM engine: the paper's technique as one composable module.
+
+`SalPimEngine` bundles the three contributions behind a single object the
+models and the serving path consume:
+
+  C1 — bandwidth-optimal linear/GEMV (float / int8-MXU / int16-Q paths),
+  C2 — LUT nonlinearities (the `Nonlinear` policy + tables),
+  C3 — hierarchy mapping: heads/columns -> `model` axis (channels),
+       batch/FSDP/seq -> `data` axis (banks), VMEM tiles (subarrays);
+       cross-shard merges via psum (the C-ALU).
+
+The engine is pure configuration + functions (no state); it is safe to
+close over inside jit. `quant` selects the decode-path weight datapath.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nonlinear import Nonlinear
+from repro.core import quant as quant_lib
+from repro.kernels import ops
+from repro.kernels import ref as ref_k
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SalPimConfig:
+    """Technique knobs (paper Table 2 defaults)."""
+
+    nonlinear_mode: str = "exact"   # "exact" | "lut"
+    lut_sections: int = 64          # paper: 64; >=32 keeps accuracy
+    quant: str = "none"             # "none" | "int8" | "fixed16" (decode path)
+    fixed_frac_w: int = 12          # Q-format fraction bits (weights)
+    fixed_frac_x: int = 10          # Q-format fraction bits (activations)
+    use_fused_attention: bool = True
+    impl: str = "reference"         # kernels impl: reference|pallas|interpret
+
+
+@dataclasses.dataclass(frozen=True)
+class SalPimEngine:
+    config: SalPimConfig
+    nl: Nonlinear
+
+    @classmethod
+    def create(cls, config: SalPimConfig | None = None) -> "SalPimEngine":
+        config = config or SalPimConfig()
+        nl = Nonlinear.create(config.nonlinear_mode, config.lut_sections)
+        return cls(config=config, nl=nl)
+
+    # -- C1: linear ----------------------------------------------------------
+    def linear(self, x: Array, w: Array, b: Array | None = None,
+               *, act: str | None = None) -> Array:
+        """y = x @ w^T (+b) (+activation). x: (..., C), w: (R, C).
+
+        The decode serving path routes through the quantized kernels; the
+        training path stays in float (straight-through estimation of the
+        LUT is handled by the tables being piecewise-linear — gradients
+        are the section slopes).
+        """
+        lead = x.shape[:-1]
+        cfg = self.config
+        # Pre-quantized serving weights (serving/quantize.py QTensor):
+        # native s8 x s8 -> s32 dot, per-row rescale, bias/act epilogue.
+        if type(w).__name__ == "QTensor":
+            from repro.serving.quantize import qtensor_linear
+            out = qtensor_linear(x, w, b)
+            if act is not None:
+                out = self.nl.activation(act)(out)
+            return out
+        if cfg.quant == "none" and cfg.impl == "reference":
+            # Fast path: stay in the caller's trace (no nested jit), keep
+            # the leading dims so XLA sees one big contraction.
+            out = jnp.einsum(
+                "...c,rc->...r", x, w.astype(x.dtype),
+                preferred_element_type=jnp.float32,
+            ).astype(x.dtype)
+            if b is not None:
+                out = out + b.astype(x.dtype)
+            if act is not None:
+                out = self.nl.activation(act)(out)
+            return out
+        x2 = x.reshape(-1, x.shape[-1])
+        if cfg.quant == "int8":
+            x_absmax = jnp.max(jnp.abs(x2), axis=-1)
+            x_scale = jnp.maximum(x_absmax, 1e-8) / 127.0
+            x_i8 = jnp.clip(jnp.round(x2 / x_scale[:, None]), -127, 127).astype(jnp.int8)
+            w_i8, w_scale = quant_lib.quantize_int8_rowwise(w)
+            out = ops.pim_linear_int8(x_i8, x_scale, w_i8, w_scale, impl=cfg.impl)
+            if b is not None:
+                out = out + b
+            out = out.astype(x.dtype)
+        elif cfg.quant == "fixed16":
+            w_fmt = quant_lib.QFormat(cfg.fixed_frac_w)
+            x_fmt = quant_lib.QFormat(cfg.fixed_frac_x)
+            w_q = w_fmt.quantize(w)
+            x_q = x_fmt.quantize(x2)
+            acc_frac = cfg.fixed_frac_w + cfg.fixed_frac_x
+            out_q = ops.pim_linear_fixed(
+                x_q, w_q, shift=acc_frac - cfg.fixed_frac_x, impl=cfg.impl)
+            out = x_fmt.dequantize(out_q).astype(x.dtype)
+            if b is not None:
+                out = out + b.astype(x.dtype)
+        else:
+            act_table = None
+            if act is not None and self.nl.mode == "lut" and cfg.impl != "reference":
+                act_table = getattr(self.nl.bank, act, None)
+            out = ops.pim_linear(x2, w, b, act_table=act_table, impl=cfg.impl)
+            if act_table is not None:
+                return out.reshape(*lead, -1)
+        out = out.reshape(*lead, -1)
+        if act is not None:
+            out = self.nl.activation(act)(out)
+        return out
+
+    # -- C3: fused decode attention -------------------------------------------
+    def decode_attention(self, q: Array, k: Array, v: Array, length: Array,
+                         *, scale: Optional[float] = None,
+                         softcap: Optional[float] = None,
+                         window=None) -> Array:
+        exp_table = self.nl.bank.exp if self.nl.mode == "lut" else None
+        if self.config.impl == "reference":
+            # Direct oracle call: stays in the caller's trace, so `window`
+            # may be a traced per-layer scalar (scan over layers).
+            return ref_k.decode_attention_ref(
+                q, k, v, length, scale=scale, exp_table=exp_table,
+                softcap=softcap, window=window)
+        return ops.pim_decode_attention(
+            q, k, v, length, scale=scale, exp_table=exp_table,
+            softcap=softcap, window=window, impl=self.config.impl)
+
+    # -- C2: norms -------------------------------------------------------------
+    def layernorm(self, x: Array, gamma: Array, beta: Array | None,
+                  eps: float = 1e-5) -> Array:
+        return self.nl.layernorm(x, gamma, beta, eps)
+
+    def rmsnorm(self, x: Array, gamma: Array, eps: float = 1e-6,
+                *, plus_one: bool = False) -> Array:
+        return self.nl.rmsnorm(x, gamma, eps, plus_one=plus_one)
+
+    def softmax(self, x: Array, axis: int = -1, where: Array | None = None) -> Array:
+        return self.nl.softmax(x, axis=axis, where=where)

@@ -1,0 +1,1 @@
+"""Deterministic, seekable data pipeline (synthetic corpus substrate)."""

@@ -1,0 +1,1 @@
+"""Distribution layer: mesh registry, sharding rules, collectives, pipeline."""

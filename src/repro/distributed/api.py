@@ -1,0 +1,101 @@
+"""Mesh registry + activation-sharding helpers used inside model code.
+
+Model code calls `constrain(x, "batch", None, "ffn")` with *logical* axis
+names; the registry maps logical axes to mesh axes (or to None when no
+mesh is active, making every constraint a no-op on single-device runs).
+This is the boundary between model math and the physical mesh — the same
+trick MaxText uses, kept deliberately small.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# Logical -> physical axis mapping. "batch" spans data (+pod when present).
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",
+    "seq_shard": "data",      # sequence-parallel long-context decode
+    "seq_tp": "model",        # Megatron-SP residual-stream sequence shard
+    "model": "model",         # TP: heads / ffn / vocab / experts
+    "expert": "model",
+}
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules() -> dict:
+    return getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev_mesh = getattr(_state, "mesh", None)
+    prev_rules = getattr(_state, "rules", DEFAULT_RULES)
+    _state.mesh = mesh
+    _state.rules = {**DEFAULT_RULES, **(rules or {})}
+    try:
+        yield
+    finally:
+        _state.mesh = prev_mesh
+        _state.rules = prev_rules
+
+
+def resolve_spec(logical: Sequence[Optional[str]], mesh: Mesh,
+                 rules: Optional[dict] = None) -> P:
+    """Map logical axis names to a PartitionSpec valid on `mesh`."""
+    rules = rules or current_rules()
+    axes = []
+    used: set[str] = set()
+    for name in logical:
+        if name is None:
+            axes.append(None)
+            continue
+        phys = rules.get(name)
+        if phys is None:
+            axes.append(None)
+            continue
+        if isinstance(phys, str):
+            phys = (phys,)
+        present = tuple(a for a in phys if a in mesh.axis_names and a not in used)
+        used.update(present)
+        if not present:
+            axes.append(None)
+        elif len(present) == 1:
+            axes.append(present[0])
+        else:
+            axes.append(present)
+    return P(*axes)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint against the active mesh (no-op without one).
+
+    Axes whose size does not divide the mesh-axis extent are dropped to
+    None — this keeps one model definition valid for every arch (e.g.
+    qwen2's 12 heads cannot shard 16-way; the constraint degrades
+    gracefully and GSPMD picks the layout).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = resolve_spec(logical, mesh)
+    fixed = []
+    for dim, axis in zip(x.shape, spec + (None,) * (x.ndim - len(spec))):
+        if axis is None:
+            fixed.append(None)
+            continue
+        names = (axis,) if isinstance(axis, str) else tuple(axis)
+        extent = 1
+        for n in names:
+            extent *= mesh.shape[n]
+        fixed.append(axis if dim % extent == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))

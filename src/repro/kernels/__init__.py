@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for SAL-PIM's compute hot spots.
+
+Modules: lut_interp (C2), gemv_pim (C1), decode_attention (C3),
+layernorm_lut (C2) — each validated against kernels/ref.py oracles in
+interpret mode; kernels/ops.py holds the jit'd dispatch wrappers.
+"""

@@ -1,0 +1,172 @@
+"""Pallas TPU kernel: fused decode attention (SAL-PIM C3 adaptation).
+
+One token attends to an S-entry KV cache. SAL-PIM's mapping for MHA:
+
+  * Q x K^T and S x V use *two accumulation directions* over the same
+    (H, S, D) K/V layout — no transpose is ever materialized. Here both
+    contractions happen inside one kernel over the same streamed K/V tile.
+  * The S-ALU `max` op feeding the exp LUT becomes the online-softmax
+    running max; exp optionally goes through the same 64-section LUT
+    table as the paper.
+  * Bank-sequential K/V concatenation becomes the ring KV cache append
+    (serving/kvcache.py); this kernel just reads the cache up to `length`.
+  * The C-ALU merge of per-bank partials becomes the (m, l, acc) merge
+    across seq blocks — and, for sequence-parallel long-context decode,
+    the same algebra merges per-chip partials (distributed/spdecode.py).
+
+Grid: (B * Hkv, S_blocks); q block (group, D) where group = H // Hkv (GQA
+groups share one K/V stream — one HBM read serves `group` query heads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lut import LutTable
+from repro.kernels.lut_interp import TABLE_PAD
+
+NEG_INF = -1e30
+
+
+def _lut_eval(x, wb_ref, *, lo, inv_step, sections):
+    """In-kernel LUT interpolation via one-hot MXU matmul (see lut_interp)."""
+    idx = jnp.floor((x - lo) * inv_step).astype(jnp.int32) + 1
+    idx = jnp.clip(idx, 0, sections + 1)
+    rows, lanes = x.shape
+    onehot = (
+        idx.reshape(rows * lanes, 1)
+        == jax.lax.broadcasted_iota(jnp.int32, (rows * lanes, TABLE_PAD), 1)
+    ).astype(jnp.float32)
+    wb = jnp.dot(onehot, wb_ref[...].astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    return wb[:, 0].reshape(rows, lanes) * x + wb[:, 1].reshape(rows, lanes)
+
+
+def _decode_attn_kernel(
+    len_ref,  # scalar prefetch: (B*Hkv,) int32 valid lengths
+    q_ref, k_ref, v_ref, expwb_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *, n_s, block_s, scale, use_lut, lo, inv_step, sections,
+    softcap, window,
+):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bh = pl.program_id(0)
+    length = len_ref[bh]
+
+    q = q_ref[0].astype(jnp.float32)             # (g, D)
+    k = k_ref[0].astype(jnp.float32)             # (block_s, D)
+    # Direction 1: contract head_dim (Q x K^T).
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    mask = pos < length
+    if window is not None:
+        mask = jnp.logical_and(mask, pos >= length - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    # Online softmax: S-ALU max op + exp LUT + running rescale.
+    m_prev = m_ref[...]                           # (g, 1)
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    if use_lut:
+        # exp of (x - m) <= 0: the LUT's calibrated negative domain.
+        p = _lut_eval(scores - m_new, expwb_ref, lo=lo, inv_step=inv_step,
+                      sections=sections)
+        corr = _lut_eval(jnp.maximum(m_prev - m_new, lo), expwb_ref,
+                         lo=lo, inv_step=inv_step, sections=sections)
+    else:
+        p = jnp.exp(scores - m_new)
+        corr = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, p, 0.0)
+
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    # Direction 2: contract seq (S x V) — same V tile, no transpose.
+    v = v_ref[0].astype(jnp.float32)              # (block_s, D)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _writeback():
+        l = jnp.maximum(l_ref[...], 1e-9)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # (B, H, D)
+    k: jax.Array,            # (B, Hkv, S, D)
+    v: jax.Array,            # (B, Hkv, S, D)
+    length: jax.Array,       # (B,) int32 valid cache lengths
+    *,
+    scale: float | None = None,
+    exp_table: LutTable | None = None,
+    softcap: float | None = None,
+    window: int | None = None,
+    block_s: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    block_s = min(block_s, S)
+    assert S % block_s == 0
+    n_s = S // block_s
+
+    use_lut = exp_table is not None
+    if use_lut:
+        wb = exp_table.wb.astype(jnp.float32)
+        wb = jnp.pad(wb, ((0, TABLE_PAD - wb.shape[0]), (0, 0)))
+        lo, inv_step, sections = exp_table.lo, exp_table.inv_step, exp_table.sections
+    else:
+        wb = jnp.zeros((TABLE_PAD, 2), jnp.float32)
+        lo, inv_step, sections = -1.0, 1.0, 1
+
+    qg = q.reshape(B * Hkv, g, D)
+    kf = k.reshape(B * Hkv, S, D)
+    vf = v.reshape(B * Hkv, S, D)
+    lens = jnp.repeat(length.astype(jnp.int32), Hkv)  # (B*Hkv,)
+
+    kernel = functools.partial(
+        _decode_attn_kernel, n_s=n_s, block_s=block_s, scale=scale,
+        use_lut=use_lut, lo=lo, inv_step=inv_step, sections=sections,
+        softcap=softcap, window=window,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * Hkv, n_s),
+        in_specs=[
+            pl.BlockSpec((1, g, D), lambda bh, s, *_: (bh, 0, 0)),
+            pl.BlockSpec((1, block_s, D), lambda bh, s, *_: (bh, s, 0)),
+            pl.BlockSpec((1, block_s, D), lambda bh, s, *_: (bh, s, 0)),
+            pl.BlockSpec((TABLE_PAD, 2), lambda bh, s, *_: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, D), lambda bh, s, *_: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, g, D), q.dtype),
+        interpret=interpret,
+    )(lens, qg, kf, vf, wb)
+    return out.reshape(B, H, D)

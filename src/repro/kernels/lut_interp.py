@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: LUT-based linear interpolation (SAL-PIM C2).
+
+TPU adaptation of the LUT-embedded subarray: the per-MAT column-select
+that fetches 16 (slope, intercept) pairs per cycle becomes a one-hot
+matmul on the MXU — `onehot(sec(x)) @ wb` — which fetches a pair for
+*every lane of the block* in one systolic pass. The table (<=128 rows x 2)
+lives in VMEM for the whole kernel, mirroring the activated LUT rows held
+in the bit-line sense amps of the LUT-embedded subarray.
+
+Layout: x is processed in (block_rows, 128) VMEM tiles; the table block
+is broadcast to every grid step (index_map -> (0, 0)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.lut import LutTable
+
+LANE = 128
+TABLE_PAD = 128  # wb padded to the MXU-aligned 128 rows
+
+
+def _lut_interp_kernel(x_ref, wb_ref, o_ref, *, lo, inv_step, sections):
+    x = x_ref[...].astype(jnp.float32)
+    # Decoding unit: clamp((x - lo) * S / (hi - lo)) + 1 guard offset.
+    idx = jnp.floor((x - lo) * inv_step).astype(jnp.int32) + 1
+    idx = jnp.clip(idx, 0, sections + 1)
+    # LUT fetch as a one-hot MXU matmul: (rows*LANE, TABLE_PAD) @ (TABLE_PAD, 2).
+    rows, lanes = x.shape
+    onehot = (
+        idx.reshape(rows * lanes, 1)
+        == jax.lax.broadcasted_iota(jnp.int32, (rows * lanes, TABLE_PAD), 1)
+    ).astype(jnp.float32)
+    wb = jnp.dot(onehot, wb_ref[...].astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    w = wb[:, 0].reshape(rows, lanes)
+    b = wb[:, 1].reshape(rows, lanes)
+    o_ref[...] = (w * x + b).astype(o_ref.dtype)
+
+
+def lut_interp_2d(x: jax.Array, table: LutTable, *, block_rows: int = 256,
+                  interpret: bool = False) -> jax.Array:
+    """Apply `table` to x of shape (M, 128*k) — core pallas_call wrapper.
+
+    The public entry point (ops.lut_apply) handles arbitrary shapes by
+    padding/reshaping into this layout.
+    """
+    m, n = x.shape
+    assert n % LANE == 0, n
+    block_rows = min(block_rows, m)
+    assert m % block_rows == 0, (m, block_rows)
+    wb = table.wb.astype(jnp.float32)
+    wb = jnp.pad(wb, ((0, TABLE_PAD - wb.shape[0]), (0, 0)))
+    kernel = functools.partial(
+        _lut_interp_kernel,
+        lo=table.lo,
+        inv_step=table.inv_step,
+        sections=table.sections,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((TABLE_PAD, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, wb)

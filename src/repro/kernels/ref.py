@@ -1,0 +1,165 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors the semantics of one kernel exactly — including the
+LUT interpolation math and fixed-point rounding — so kernel tests can
+assert_allclose against these with tight tolerances.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut as lut_lib
+from repro.core.lut import LutTable
+
+Array = jax.Array
+
+
+def lut_interp_ref(x: Array, table: LutTable) -> Array:
+    """Oracle for kernels/lut_interp.py."""
+    return lut_lib.apply_table(x, table)
+
+
+def gemv_pim_ref(
+    x: Array,
+    w: Array,
+    b: Array | None = None,
+    *,
+    act_table: LutTable | None = None,
+) -> Array:
+    """Oracle for kernels/gemv_pim.py (float path).
+
+    x: (B, C), w: (R, C) -> (B, R); fp32 accumulation; optional fused LUT
+    activation epilogue (the 'end-to-end in PIM' fusion).
+    """
+    out = jnp.einsum(
+        "bc,rc->br",
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    if act_table is not None:
+        out = lut_lib.apply_table(out, act_table)
+    return out.astype(x.dtype)
+
+
+def gemv_pim_int8_ref(
+    x_i8: Array,
+    x_scale: Array,
+    w_i8: Array,
+    w_scale: Array,
+    b: Array | None = None,
+) -> Array:
+    """Oracle for the int8 MXU path: int32 accum, fp32 rescale.
+
+    x_i8: (B, C) int8, x_scale: (B,) f32; w_i8: (R, C) int8, w_scale: (R,).
+    """
+    acc = jnp.einsum(
+        "bc,rc->br",
+        x_i8.astype(jnp.int32),
+        w_i8.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    out = acc.astype(jnp.float32) * x_scale[:, None] * w_scale[None, :]
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out
+
+
+def gemv_pim_fixed_ref(x_q: Array, w_q: Array, *, shift: int) -> Array:
+    """Oracle for the faithful int16 Q-format path (S-ALU writeback)."""
+    acc = jnp.einsum(
+        "bc,rc->br",
+        x_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    shifted = jnp.right_shift(acc, shift)
+    return jnp.clip(shifted, -32768, 32767).astype(jnp.int16)
+
+
+def decode_attention_ref(
+    q: Array,
+    k: Array,
+    v: Array,
+    length: Array | int,
+    *,
+    scale: float | None = None,
+    exp_table: LutTable | None = None,
+    recip_table: LutTable | None = None,
+    softcap: float | None = None,
+    window: int | None = None,
+    sinks: Array | None = None,
+) -> Array:
+    """Oracle for kernels/decode_attention.py.
+
+    q: (B, H, D) single new token; k/v: (B, Hkv, S, D) cache; length:
+    number of valid cache positions (scalar or (B,)). GQA via H % Hkv == 0.
+    Optional sliding window (h2o-danube/gemma2 local layers) and gemma2
+    attn softcapping.
+    """
+    B, H, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qf, kf) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    pos = jnp.arange(S)
+    length = jnp.asarray(length)
+    lens = jnp.broadcast_to(length, (B,))
+    mask = pos[None, :] < lens[:, None]
+    if window is not None:
+        mask = mask & (pos[None, :] >= (lens[:, None] - window))
+    mask_b = mask[:, None, None, :]
+    scores = jnp.where(mask_b, scores, -jnp.inf)
+
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    if exp_table is not None:
+        e = lut_lib.apply_table(scores - m, exp_table)
+    else:
+        e = jnp.exp(scores - m)
+    e = jnp.where(mask_b, e, 0.0)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    if sinks is not None:  # attention-sink logits (optional extension)
+        l = l + jnp.exp(sinks.reshape(1, Hkv, g, 1) - m)
+    if recip_table is not None:
+        inv = lut_lib.lut_reciprocal(jnp.maximum(l, 1e-9), recip_table)
+    else:
+        inv = 1.0 / jnp.maximum(l, 1e-9)
+    out = jnp.einsum("bhgs,bhsd->bhgd", e * inv, vf)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def layernorm_lut_ref(
+    x: Array,
+    gamma: Array,
+    beta: Array | None,
+    *,
+    eps: float = 1e-5,
+    rsqrt_table: LutTable | None = None,
+    rms: bool = False,
+) -> Array:
+    """Oracle for kernels/layernorm_lut.py."""
+    xf = x.astype(jnp.float32)
+    if rms:
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        xc = xf
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        xc = xf - mean
+        var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    if rsqrt_table is not None:
+        inv = lut_lib.lut_rsqrt(var + eps, rsqrt_table)
+    else:
+        inv = jax.lax.rsqrt(var + eps)
+    out = xc * inv * gamma.astype(jnp.float32)
+    if beta is not None:
+        out = out + beta.astype(jnp.float32)
+    return out.astype(x.dtype)

@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax-touching import: jax locks the device count on init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, record memory/cost/collective analysis for §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape decode_32k --mesh single            # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+                                                    # full sweep, JSON per cell
+
+Step functions lowered per shape kind:
+    train_4k     -> train_step (loss + grad + AdamW update, donated state)
+    prefill_32k  -> prefill    (logits + primed KV cache)
+    decode_32k   -> serve_step (one token through the full decode path)
+    long_500k    -> serve_step with sequence-sharded KV (B=1)
+
+Everything is ShapeDtypeStruct — no real allocation anywhere.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfg_lib
+from repro.core.salpim import SalPimEngine, SalPimConfig
+from repro.distributed import sharding as shard_lib
+from repro.distributed.api import use_mesh
+from repro.launch import hlo_cost
+from repro.launch import roofline as roof
+from repro.launch.mesh import make_production_mesh
+from repro.models import api as model_api
+from repro.models.config import ModelConfig
+from repro.runtime import optimizer as opt_lib
+from repro.runtime.train_loop import make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _eval_shape_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: model_api.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def build_lowerable(cfg: ModelConfig, shape: cfg_lib.ShapeSpec, mesh,
+                    *, fsdp: bool, engine: SalPimEngine):
+    """Returns (jitted_fn, example_args as SDS pytree)."""
+    params_sds = _eval_shape_params(cfg)
+    if cfg.serve_quant == "int8" and shape.kind == "decode":
+        from repro.serving.quantize import quantize_params_int8
+        params_sds = jax.eval_shape(quantize_params_int8, params_sds)
+    pshard = shard_lib.param_shardings(params_sds, mesh, fsdp=fsdp)
+    specs = cfg_lib.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_cfg = opt_lib.AdamWConfig()
+        step = make_train_step(cfg, engine, opt_cfg)
+        opt_sds = jax.eval_shape(opt_lib.init_opt_state, params_sds)
+        oshard = opt_lib.OptState(
+            step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            mu=pshard, nu=pshard)
+        bshard = shard_lib.to_shardings(
+            shard_lib.batch_pspecs(specs, mesh), mesh)
+        fn = jax.jit(step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        return fn, (params_sds, opt_sds, specs)
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return model_api.prefill(params, batch, cfg, engine,
+                                     max_len=shape.seq_len)
+
+        bshard = shard_lib.to_shardings(
+            shard_lib.batch_pspecs(specs, mesh), mesh)
+        fn = jax.jit(prefill_fn, in_shardings=(pshard, bshard))
+        return fn, (params_sds, specs)
+
+    if shape.kind == "decode":
+        B = shape.global_batch
+        cache_sds = jax.eval_shape(
+            lambda: model_api.init_cache(cfg, B, shape.seq_len))
+        seq_shard = B == 1
+        cshard = shard_lib.to_shardings(
+            shard_lib.cache_pspecs(cache_sds, mesh, seq_shard=seq_shard),
+            mesh)
+
+        def serve_step(params, token, cache):
+            return model_api.decode_step(params, token, cache, cfg, engine)
+
+        tshard = shard_lib.to_shardings(
+            shard_lib.batch_pspecs({"token": specs["token"]}, mesh), mesh)
+        fn = jax.jit(serve_step,
+                     in_shardings=(pshard, tshard["token"], cshard),
+                     out_shardings=(None, cshard),
+                     donate_argnums=(2,))
+        return fn, (params_sds, specs["token"], cache_sds)
+
+    raise ValueError(shape.kind)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             *, lut: bool = True, fsdp=None, overrides: dict | None = None
+             ) -> dict:
+    t_start = time.time()
+    cfg = cfg_lib.get_config(arch)
+    shape = cfg_lib.SHAPES[shape_name]
+    if shape.kind == "decode":
+        cfg = dataclasses.replace(cfg, decode_uniform=True)
+    if overrides:
+        overrides = dict(overrides)
+        if "force_fsdp" in overrides:
+            fsdp = bool(overrides.pop("force_fsdp"))
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    engine = SalPimEngine.create(dataclasses.replace(
+        cfg.salpim, nonlinear_mode=("lut" if lut else "exact"),
+        impl="reference"))
+    if fsdp is None:
+        fsdp = shard_lib.should_fsdp(cfg) and shape.kind == "train"
+
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "kind": shape.kind, "fsdp": bool(fsdp),
+           "devices": int(mesh.devices.size)}
+    with use_mesh(mesh), mesh:
+        fn, args = build_lowerable(cfg, shape, mesh, fsdp=fsdp, engine=engine)
+        t0 = time.time()
+        lowered = fn.lower(*args)
+        rec["lower_sec"] = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_sec"] = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["cost"] = {k: float(v) for k, v in cost.items()
+                       if isinstance(v, (int, float)) and k in
+                       ("flops", "bytes accessed", "transcendentals",
+                        "optimal_seconds")}
+        hlo = compiled.as_text()
+        # cost_analysis() counts while (scan) bodies once; expand them by
+        # known_trip_count for the real per-device terms (hlo_cost.py).
+        expanded = hlo_cost.analyze(hlo)
+        rec["collectives"] = {
+            "per_kind_bytes": expanded.coll_bytes,
+            "per_kind_count": expanded.coll_count,
+            "total_bytes": expanded.total_coll_bytes,
+            "unexpanded": roof.collective_bytes(hlo),
+        }
+        # Memory term: cost_analysis bytes both under-count (scan bodies
+        # once) and over-count (per-fusion re-reads). Use the larger of
+        # (a) expanded dot-operand stream (weights/cache re-read per
+        # layer) and (b) every argument read + output written once.
+        mem_floor = ((rec["memory"]["argument_bytes"] or 0)
+                     + (rec["memory"]["output_bytes"] or 0))
+        corrected_cost = {
+            "flops": max(expanded.flops, rec["cost"].get("flops", 0.0)),
+            "bytes accessed": max(expanded.dot_bytes, float(mem_floor)),
+        }
+        rec["cost_expanded"] = {
+            "flops": expanded.flops, "dot_bytes": expanded.dot_bytes}
+        rec["roofline"] = roof.roofline_terms(
+            corrected_cost, expanded.total_coll_bytes)
+
+        n_tokens = shape.global_batch * (
+            shape.seq_len if shape.kind in ("train", "prefill") else 1)
+        mf = roof.model_flops(cfg, shape.kind, n_tokens)
+        rec["model_flops_global"] = mf
+        dev = mesh.devices.size
+        hlo_flops_global = rec["roofline"]["flops_per_device"] * dev
+        rec["useful_flops_ratio"] = (mf / hlo_flops_global
+                                     if hlo_flops_global else None)
+        rec["params"] = cfg.param_count()
+        rec["active_params"] = cfg.active_param_count()
+    rec["total_sec"] = time.time() - t_start
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", type=str, default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--exact-nl", action="store_true",
+                    help="use exact nonlinearities instead of LUT")
+    ap.add_argument("--out", type=str, default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--override", type=str, default=None,
+                    help="comma-separated cfg overrides, e.g. "
+                         "moe_impl=shardmap,remat=none,attn_chunk=2048")
+    ap.add_argument("--tag", type=str, default="",
+                    help="suffix for the output JSON name")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.override:
+        import repro.models.config as mc
+        fields = {f.name: f.type for f in dataclasses.fields(mc.ModelConfig)}
+        for kv in args.override.split(","):
+            k, v = kv.split("=")
+            if v in ("True", "False"):
+                overrides[k] = v == "True"
+            else:
+                try:
+                    overrides[k] = int(v)
+                except ValueError:
+                    overrides[k] = v
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = cfg_lib.cells()
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(cfg_lib.normalize(args.arch), args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            tag = f"{arch}.{shape}.{mesh_kind}" + (
+                f".{args.tag}" if args.tag else "")
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip] {tag}")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                rec = run_cell(arch, shape, mesh_kind, lut=not args.exact_nl,
+                               overrides=overrides)
+                r = rec["roofline"]
+                print(f"  ok: compile={rec['compile_sec']:.1f}s "
+                      f"bottleneck={r['bottleneck']} "
+                      f"t=(c={r['t_compute']:.3e},m={r['t_memory']:.3e},"
+                      f"x={r['t_collective']:.3e})s "
+                      f"mem_args={rec['memory']['argument_bytes']}",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures += 1
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                       "error": repr(e),
+                       "traceback": traceback.format_exc()}
+                print(f"  FAIL: {e!r}", flush=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+    print(f"done, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

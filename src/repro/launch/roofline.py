@@ -1,0 +1,135 @@
+"""Roofline-term computation from compiled dry-run artifacts.
+
+Terms (seconds), per the assignment, TPU v5e constants:
+    compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+    collective = collective_bytes_per_device / link_bw    (~50 GB/s/link)
+
+`cost_analysis()` on a GSPMD-partitioned module reports the per-device
+program, so terms divide by per-chip peaks directly. collective_bytes is
+parsed from the optimized HLO: the summed operand bytes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (async
+`-start` forms counted once, `-done` ignored).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# def line: [ROOT] %name = TYPE opname(...)
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\(")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_shape_bytes(dt, dims)
+               for dt, dims in _SHAPE_RE.findall(type_str))
+
+
+def _operand_region(line: str, start: int) -> str:
+    depth = 1
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return line[start:i]
+    return line[start:]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind from optimized HLO text.
+
+    Two passes: (1) map instruction name -> output bytes from its def
+    line; (2) for each collective, sum the resolved operand sizes (modern
+    HLO prints operands as bare %names). `-done` ops are skipped so async
+    pairs count once.
+    """
+    sizes: dict[str, int] = {}
+    defs: list[tuple[str, str, int]] = []  # (opname, operand_region, defline_idx)
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opname = m.group(1), m.group(2), m.group(3)
+        sizes[name] = _type_bytes(type_str)
+        base = opname
+        if base.endswith("-start"):
+            base = base[:-len("-start")]
+        if base in _COLLECTIVES:
+            defs.append((base, _operand_region(line, m.end()), 0))
+
+    totals: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for kind, region, _ in defs:
+        # Prefer explicit shape literals in the operand region; else
+        # resolve operand names against the def table.
+        b = sum(_shape_bytes(dt, dims)
+                for dt, dims in _SHAPE_RE.findall(region))
+        if b == 0:
+            b = sum(sizes.get(n, 0) for n in _NAME_RE.findall(region))
+        totals[kind] += b
+        counts[kind] += 1
+    return {
+        "per_kind_bytes": totals,
+        "per_kind_count": counts,
+        "total_bytes": sum(totals.values()),
+    }
+
+
+def roofline_terms(cost: dict[str, Any], coll_bytes: int) -> dict:
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    mem = float(cost.get("bytes accessed", 0.0) or 0.0)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = mem / HBM_BW
+    t_collective = coll_bytes / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    bottleneck = max(terms, key=terms.get)
+    total = max(sum(terms.values()), 1e-30)
+    return {
+        **{f"t_{k}": v for k, v in terms.items()},
+        "bottleneck": bottleneck,
+        "t_bound": terms[bottleneck],
+        "flops_per_device": flops,
+        "bytes_per_device": mem,
+        "collective_bytes_per_device": float(coll_bytes),
+    }
+
+
+def model_flops(cfg, shape_kind: str, n_tokens: int) -> float:
+    """MODEL_FLOPS: 6·N·D train (fwd+bwd), 2·N_active·D forward-only."""
+    n_active = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n_active * n_tokens
+    return 2.0 * n_active * n_tokens

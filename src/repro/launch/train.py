@@ -1,0 +1,77 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+        --steps 50 --batch 8 --seq 128 --lut
+
+On the production mesh this is launched once per host (jax.distributed
+initializes from the TPU environment); in this container it drives the
+reduced configs on CPU. The same run_training loop serves both — the mesh
+is the only variable.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+import jax
+
+from repro import configs as cfg_lib
+from repro.core.salpim import SalPimConfig, SalPimEngine
+from repro.data import tokens as data_lib
+from repro.distributed import sharding as shard_lib
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.runtime import optimizer as opt_lib
+from repro.runtime.train_loop import TrainConfig, run_training
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="gpt2-medium")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--lut", action="store_true",
+                    help="run the SAL-PIM LUT nonlinearity path")
+    ap.add_argument("--mesh", choices=["none", "single", "multi", "test"],
+                    default="none")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--ckpt-dir", type=str, default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--metrics", type=str, default=None)
+    args = ap.parse_args()
+
+    cfg = cfg_lib.get_config(args.arch, smoke=args.smoke)
+    cfg = dataclasses.replace(
+        cfg, salpim=dataclasses.replace(
+            cfg.salpim, nonlinear_mode="lut" if args.lut else "exact"))
+    engine = SalPimEngine.create(cfg.salpim)
+
+    mesh = None
+    if args.mesh in ("single", "multi"):
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    elif args.mesh == "test":
+        mesh = make_test_mesh()
+
+    data_cfg = data_lib.data_config_for_model(cfg, args.seq, args.batch)
+    opt_cfg = opt_lib.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                                  total_steps=args.steps)
+    train_cfg = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                            ckpt_every=args.ckpt_every, n_micro=args.micro,
+                            metrics_path=args.metrics)
+
+    result = run_training(cfg, train_cfg, opt_cfg, data_cfg, engine=engine,
+                          mesh=mesh, fsdp=args.fsdp,
+                          hooks={"on_log": lambda r: print(
+                              f"step {r['step']:5d} loss {r['loss']:.4f} "
+                              f"lr {r['lr']:.2e} {r['sec_per_step']*1e3:.0f} ms",
+                              flush=True),
+                              "on_straggler": lambda s, w: print(f"[warn] {w}")})
+    print(f"final loss: {result['history'][-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,235 @@
+"""Multi-head attention: GQA, RoPE/M-RoPE, SWA, softcap, bias; full-seq and
+single-token decode forms.
+
+Full-seq (train/prefill) keeps the two SAL-PIM accumulation directions as
+two einsum contractions over the same (B, S, Hkv, D) K/V layout (never a
+materialized transpose). Softmax routes through the engine — i.e. the
+LUT exp/reciprocal path when the technique is on. Long sequences use
+query-chunked (memory-efficient) attention via lax.scan.
+
+Decode uses the fused kernel path (`engine.decode_attention`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.salpim import SalPimEngine
+from repro.distributed.api import constrain
+from repro.models.config import ModelConfig
+from repro.models.rope import apply_rope
+
+Array = jax.Array
+
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d = cfg.d_model
+    n_q = cfg.n_heads * cfg.head_dim
+    n_kv = cfg.n_kv_heads * cfg.head_dim
+    ks = jax.random.split(key, 4)
+    scale_in = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (n_q, d)) * scale_in).astype(cfg.pdtype),
+        "wk": (jax.random.normal(ks[1], (n_kv, d)) * scale_in).astype(cfg.pdtype),
+        "wv": (jax.random.normal(ks[2], (n_kv, d)) * scale_in).astype(cfg.pdtype),
+        "wo": (jax.random.normal(ks[3], (d, n_q)) * (n_q ** -0.5)).astype(cfg.pdtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_q,), cfg.pdtype)
+        p["bk"] = jnp.zeros((n_kv,), cfg.pdtype)
+        p["bv"] = jnp.zeros((n_kv,), cfg.pdtype)
+    del cross
+    return p
+
+
+def _project_qkv(p: dict, x: Array, cfg: ModelConfig, engine: SalPimEngine,
+                 kv_x: Array | None = None):
+    """x (B, S, D) -> q (B,S,H,Dh), k/v (B,Skv,Hkv,Dh)."""
+    B, S, _ = x.shape
+    kv_in = x if kv_x is None else kv_x
+    Skv = kv_in.shape[1]
+    q = engine.linear(x, p["wq"], p.get("bq"))
+    k = engine.linear(kv_in, p["wk"], p.get("bk"))
+    v = engine.linear(kv_in, p["wv"], p.get("bv"))
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _masked_softmax_attn(
+    q: Array,              # (B, Sq, H, Dh)
+    k: Array,              # (B, Sk, Hkv, Dh)
+    v: Array,              # (B, Sk, Hkv, Dh)
+    engine: SalPimEngine,
+    cfg: ModelConfig,
+    *,
+    q_offset: Array | int,
+    causal: bool,
+    window: Optional[int],
+) -> Array:
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = cfg.attn_scale if cfg.attn_scale is not None else Dh ** -0.5
+    qg = q.reshape(B, Sq, Hkv, g, Dh)
+    # Direction 1: contract head_dim (Q x K^T) — no transpose of K.
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if cfg.attn_softcap is not None:
+        scores = engine.nl.softcap(scores, cfg.attn_softcap)
+    q_pos = jnp.arange(Sq) + q_offset          # absolute query positions
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    probs = engine.softmax(scores, axis=-1, where=mask[None, None, None])
+    # Direction 2: contract seq (S x V) over the same V layout.
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, Dh)
+
+
+def attention_fullseq(
+    p: dict,
+    x: Array,                      # (B, S, D)
+    cfg: ModelConfig,
+    engine: SalPimEngine,
+    *,
+    cos: Array | None,             # (S, Dh/2) or (B, S, Dh/2)
+    sin: Array | None,
+    window: Optional[int] = None,
+    causal: bool = True,
+    kv_x: Array | None = None,     # cross-attention source (B, Senc, D)
+    cos_kv: Array | None = None,
+    sin_kv: Array | None = None,
+    return_kv: bool = False,
+):
+    B, S, D = x.shape
+    q, k, v = _project_qkv(p, x, cfg, engine, kv_x=kv_x)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        kc, ks_ = (cos, sin) if kv_x is None else (cos_kv, sin_kv)
+        if kc is not None:
+            k = apply_rope(k, kc, ks_)
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    v = constrain(v, "batch", None, "model", None)
+
+    Sk = k.shape[1]
+    chunk = cfg.attn_chunk
+    if S > chunk and S % chunk == 0:
+        # Memory-efficient attention: scan over query chunks.
+        n_chunks = S // chunk
+        qs = q.reshape(B, n_chunks, chunk, cfg.n_heads, cfg.head_dim)
+        qs = jnp.moveaxis(qs, 1, 0)           # (n, B, chunk, H, Dh)
+
+        def body(_, qc_i):
+            qc, i = qc_i
+            out = _masked_softmax_attn(
+                qc, k, v, engine, cfg,
+                q_offset=i * chunk, causal=causal, window=window)
+            return None, out
+
+        _, outs = jax.lax.scan(body, None, (qs, jnp.arange(n_chunks)))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    else:
+        out = _masked_softmax_attn(q, k, v, engine, cfg, q_offset=0,
+                                   causal=causal, window=window)
+    out = engine.linear(out.reshape(B, S, -1), p["wo"])
+    out = constrain(out, "batch", None, None)
+    if return_kv:
+        # Cache layout (B, Hkv, S, D): the bank-sequential concat target.
+        return out, (jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2))
+    return out
+
+
+def _quantize_vec(x: Array) -> tuple[Array, Array]:
+    """(..., D) -> int8 + (...) scale (per-vector symmetric)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def attention_decode(
+    p: dict,
+    x: Array,                      # (B, D) one new token per sequence
+    cache_k: Array,                # (B, Hkv, Smax, Dh)
+    cache_v: Array,
+    lengths: Array,                # (B,) tokens already in cache
+    cfg: ModelConfig,
+    engine: SalPimEngine,
+    *,
+    cos: Array | None,             # (B, Dh/2) rope at current positions
+    sin: Array | None,
+    window: Optional[int] = None,
+    update_cache: bool = True,
+    kv_scales: Optional[tuple] = None,  # (k_scale, v_scale) int8-cache mode
+):
+    """One decode step; returns (out (B, D), new_k, new_v[, new_scales])."""
+    B, D = x.shape
+    q = engine.linear(x, p["wq"], p.get("bq")).reshape(B, cfg.n_heads, cfg.head_dim)
+    k = engine.linear(x, p["wk"], p.get("bk")).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+    v = engine.linear(x, p["wv"], p.get("bv")).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+    if cos is not None:
+        q = apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
+        k = apply_rope(k[:, None], cos[:, None], sin[:, None])[:, 0]
+
+    int8_kv = kv_scales is not None
+    if int8_kv:
+        ksc, vsc = kv_scales                     # (B, Hkv, Smax)
+        k_store, k_new_sc = _quantize_vec(k)     # int8 payloads
+        v_store, v_new_sc = _quantize_vec(v)
+    else:
+        k_store, v_store = k, v
+
+    if update_cache:
+        # Sequential-bank concatenation: append the new K/V at `lengths`.
+        if cfg.decode_uniform:
+            # Steady-state batch decode: one shared position, a single
+            # dynamic_update_slice (partitions across B/H/S shards).
+            pos = lengths[0]
+            cache_k = jax.lax.dynamic_update_slice(
+                cache_k, k_store[:, :, None].astype(cache_k.dtype),
+                (0, 0, pos, 0))
+            cache_v = jax.lax.dynamic_update_slice(
+                cache_v, v_store[:, :, None].astype(cache_v.dtype),
+                (0, 0, pos, 0))
+            if int8_kv:
+                ksc = jax.lax.dynamic_update_slice(
+                    ksc, k_new_sc[:, :, None], (0, 0, pos))
+                vsc = jax.lax.dynamic_update_slice(
+                    vsc, v_new_sc[:, :, None], (0, 0, pos))
+        else:
+            b_idx = jnp.arange(B)
+            cache_k = cache_k.at[b_idx, :, lengths].set(
+                k_store.astype(cache_k.dtype))
+            cache_v = cache_v.at[b_idx, :, lengths].set(
+                v_store.astype(cache_v.dtype))
+            if int8_kv:
+                ksc = ksc.at[b_idx, :, lengths].set(k_new_sc)
+                vsc = vsc.at[b_idx, :, lengths].set(v_new_sc)
+        valid = lengths + 1
+    else:
+        valid = lengths
+
+    if int8_kv:
+        k_read = (cache_k.astype(q.dtype) * ksc[..., None].astype(q.dtype))
+        v_read = (cache_v.astype(q.dtype) * vsc[..., None].astype(q.dtype))
+    else:
+        k_read, v_read = cache_k, cache_v
+
+    scale = cfg.attn_scale if cfg.attn_scale is not None else cfg.head_dim ** -0.5
+    out = engine.decode_attention(
+        q, k_read, v_read, valid, scale=scale,
+        softcap=cfg.attn_softcap, window=window)
+    out = engine.linear(out.reshape(B, -1), p["wo"])
+    if int8_kv:
+        return out, cache_k, cache_v, ksc, vsc
+    return out, cache_k, cache_v

@@ -1,0 +1,119 @@
+"""Decoder/encoder blocks: norm wiring, residuals, per-family dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.salpim import SalPimEngine
+from repro.models import attention as attn_lib
+from repro.models import ffn as ffn_lib
+from repro.models import moe as moe_lib
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+# Sentinel window width meaning "global attention" when windows are traced
+# per-layer scalars inside a scan over layers.
+GLOBAL_WINDOW = 1 << 30
+
+
+def init_norm(cfg: ModelConfig, d: int | None = None) -> dict:
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"g": jnp.ones((d,), cfg.pdtype), "b": jnp.zeros((d,), cfg.pdtype)}
+    if cfg.norm == "rmsnorm_plus1":  # gemma: store (weight), apply 1 + w
+        return {"g": jnp.zeros((d,), cfg.pdtype)}
+    return {"g": jnp.ones((d,), cfg.pdtype)}
+
+
+def apply_norm(p: dict, x: Array, cfg: ModelConfig, engine: SalPimEngine) -> Array:
+    if cfg.norm == "layernorm":
+        return engine.layernorm(x, p["g"], p["b"], cfg.norm_eps)
+    if cfg.norm == "rmsnorm_plus1":
+        return engine.rmsnorm(x, p["g"], cfg.norm_eps, plus_one=True)
+    return engine.rmsnorm(x, p["g"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE decoder block
+# ---------------------------------------------------------------------------
+
+def init_decoder_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": init_norm(cfg),
+        "attn": attn_lib.init_attention(k1, cfg),
+        "ln2": init_norm(cfg),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_lib.init_moe(k2, cfg)
+    else:
+        p["ffn"] = ffn_lib.init_ffn(k2, cfg)
+    if cfg.post_norms:
+        p["post_ln1"] = init_norm(cfg)
+        p["post_ln2"] = init_norm(cfg)
+    return p
+
+
+def apply_decoder_block(
+    p: dict, x: Array, cfg: ModelConfig, engine: SalPimEngine, *,
+    cos: Array | None, sin: Array | None, window,
+) -> Array:
+    h = apply_norm(p["ln1"], x, cfg, engine)
+    h = attn_lib.attention_fullseq(
+        p["attn"], h, cfg, engine, cos=cos, sin=sin, window=window,
+        causal=cfg.causal)
+    if cfg.post_norms:
+        h = apply_norm(p["post_ln1"], h, cfg, engine)
+    x = x + h
+    h = apply_norm(p["ln2"], x, cfg, engine)
+    h = (moe_lib.apply_moe(p["moe"], h, cfg, engine) if cfg.family == "moe"
+         else ffn_lib.apply_ffn(p["ffn"], h, cfg, engine))
+    if cfg.post_norms:
+        h = apply_norm(p["post_ln2"], h, cfg, engine)
+    return x + h
+
+
+def apply_decoder_block_prefill(
+    p: dict, x: Array, cfg: ModelConfig, engine: SalPimEngine, *,
+    cos, sin, window,
+):
+    """Like apply_decoder_block but also returns (k, v) for the cache."""
+    h = apply_norm(p["ln1"], x, cfg, engine)
+    h, (ck, cv) = attn_lib.attention_fullseq(
+        p["attn"], h, cfg, engine, cos=cos, sin=sin, window=window,
+        causal=cfg.causal, return_kv=True)
+    if cfg.post_norms:
+        h = apply_norm(p["post_ln1"], h, cfg, engine)
+    x = x + h
+    h = apply_norm(p["ln2"], x, cfg, engine)
+    h = (moe_lib.apply_moe(p["moe"], h, cfg, engine) if cfg.family == "moe"
+         else ffn_lib.apply_ffn(p["ffn"], h, cfg, engine))
+    if cfg.post_norms:
+        h = apply_norm(p["post_ln2"], h, cfg, engine)
+    return x + h, (ck, cv)
+
+
+def apply_decoder_block_decode(
+    p: dict, x: Array, cache_k: Array, cache_v: Array, lengths: Array,
+    cfg: ModelConfig, engine: SalPimEngine, *, cos, sin, window,
+    kv_scales=None,
+):
+    """Single-token step. x (B, D). Returns (x', k', v'[, scales])."""
+    h = apply_norm(p["ln1"], x, cfg, engine)
+    res = attn_lib.attention_decode(
+        p["attn"], h, cache_k, cache_v, lengths, cfg, engine,
+        cos=cos, sin=sin, window=window, kv_scales=kv_scales)
+    h, ck, cv = res[0], res[1], res[2]
+    scales = res[3:] if kv_scales is not None else None
+    if cfg.post_norms:
+        h = apply_norm(p["post_ln1"], h, cfg, engine)
+    x = x + h
+    h = apply_norm(p["ln2"], x, cfg, engine)
+    h = (moe_lib.apply_moe(p["moe"], h, cfg, engine) if cfg.family == "moe"
+         else ffn_lib.apply_ffn(p["ffn"], h, cfg, engine))
+    if cfg.post_norms:
+        h = apply_norm(p["post_ln2"], h, cfg, engine)
+    if scales is not None:
+        return x + h, ck, cv, scales[0], scales[1]
+    return x + h, ck, cv

@@ -1,0 +1,201 @@
+"""Unified model configuration covering the 10 assigned architectures.
+
+One schema, five families:
+  dense   — qwen2-1.5b, gemma2-2b, nemotron-4-340b, h2o-danube-3-4b
+  moe     — olmoe-1b-7b, phi3.5-moe-42b
+  ssm     — mamba2-370m (SSD, attention-free)
+  hybrid  — zamba2-1.2b (Mamba2 backbone + shared attention block)
+  encdec  — whisper-large-v3 (audio frontend stubbed)
+  vlm     — qwen2-vl-2b (dense + M-RoPE, vision frontend stubbed)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.salpim import SalPimConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+
+    # attention flavour
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    mrope_sections: Optional[tuple[int, ...]] = None  # qwen2-vl M-RoPE
+    sliding_window: Optional[int] = None              # SWA width
+    local_global_pattern: bool = False                # gemma2: alternate SWA/full
+    attn_softcap: Optional[float] = None              # gemma2: 50.0
+    final_softcap: Optional[float] = None             # gemma2: 30.0
+    attn_scale: Optional[float] = None                # override 1/sqrt(head_dim)
+    learned_pos_emb: bool = False                     # whisper/gpt2 style
+    causal: bool = True
+
+    # block flavour
+    activation: str = "silu"         # silu | gelu | squared_relu
+    gated_mlp: bool = True           # SwiGLU/GeGLU vs plain MLP
+    norm: str = "rmsnorm"            # rmsnorm | rmsnorm_plus1 | layernorm
+    norm_eps: float = 1e-6
+    post_norms: bool = False         # gemma2 post-attn/post-ffn norms
+    embed_scale: bool = False        # gemma2: x *= sqrt(d_model)
+    tie_embeddings: bool = False     # kept untied in params for shardability;
+                                     # flag recorded for fidelity notes
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    router_cap_factor: float = 1.25
+    # "gspmd": auto-partitioned dispatch (baseline). "shardmap": explicit
+    # EP — tokens stay on their data shard, experts shard the model axis,
+    # dispatch/combine are shard-local, one psum(model) merges expert
+    # contributions (§Perf iteration 1).
+    moe_impl: str = "gspmd"
+
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv: int = 4                # causal conv kernel width
+
+    # hybrid (zamba2): one shared attention block applied every N ssm layers
+    hybrid_attn_every: int = 0
+
+    # encdec (whisper)
+    n_enc_layers: int = 0
+    enc_seq: int = 1500              # precomputed frame-embedding count (stub)
+
+    # dtypes
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+
+    # attention chunking for long-context prefill (memory-efficient attention)
+    attn_chunk: int = 1024
+
+    # max positions (KV allocation guard; informational)
+    max_seq: int = 131072
+
+    # SAL-PIM technique knobs
+    salpim: SalPimConfig = dataclasses.field(default_factory=SalPimConfig)
+
+    # remat policy for train_step: "none" | "block" (checkpoint each layer)
+    remat: str = "block"
+
+    # Megatron-SP-style sequence-parallel activations: the residual stream
+    # between blocks is sharded over `model` along the sequence dim, so
+    # XLA turns per-layer psum(B,S,D) into reduce-scatter + all-gather
+    # (half the bytes) and norms/elementwise run 1/TP as much (§Perf).
+    seq_parallel_acts: bool = False
+
+    # Serving-path quantization (beyond-paper §Perf): "int8" stores matmul
+    # weights as QTensor (s8 dots) — the TPU-native S-ALU datapath.
+    serve_quant: str = "none"
+    # KV cache storage: "model" (= compute dtype) or "int8" (per-vector
+    # scales; halves the decode-dominating cache traffic).
+    kv_dtype: str = "model"
+
+    # Decode cache-append mode: True = all sequences share one position
+    # (steady-state batch decode; single dynamic_update_slice, shards
+    # cleanly) — used by dry-run/benchmarks. False = per-sequence lengths
+    # (continuous batching; batched scatter).
+    decode_uniform: bool = False
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def moe_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    def window_for_layer(self, i: int) -> Optional[int]:
+        """SWA width for layer i (gemma2 alternates local/global)."""
+        if self.local_global_pattern:
+            return self.sliding_window if i % 2 == 0 else None
+        return self.sliding_window
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, v = self.d_model, self.vocab
+        hd = self.head_dim
+        n_q = self.n_heads * hd
+        n_kv = self.n_kv_heads * hd
+        attn = d * n_q + 2 * d * n_kv + n_q * d  # wq, wk, wv, wo
+        if self.qkv_bias:
+            attn += n_q + 2 * n_kv
+        if self.gated_mlp:
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        if self.family == "moe":
+            mlp = self.n_experts * (3 if self.gated_mlp else 2) * d * self.moe_ff
+            mlp += d * self.n_experts  # router
+        ssm = 0
+        if self.family in ("ssm", "hybrid"):
+            din = self.d_inner
+            nh = self.ssm_heads
+            # in_proj: z, x, B, C, dt ; out_proj
+            ssm = d * (2 * din + 2 * self.ssm_state + nh) + din * d
+            ssm += self.ssm_conv * (din + 2 * self.ssm_state)  # conv
+            ssm += 2 * nh + din  # A_log, D, gate-norm
+        blocks = 0
+        n = self.n_layers
+        if self.family == "dense":
+            blocks = n * (attn + mlp + 2 * d)
+        elif self.family == "moe":
+            blocks = n * (attn + mlp + 2 * d)
+        elif self.family == "ssm":
+            blocks = n * (ssm + d)
+        elif self.family == "hybrid":
+            n_attn = max(1, n // max(self.hybrid_attn_every, 1))
+            blocks = n * (ssm + d) + (attn + mlp + 2 * d)  # shared attn block
+            del n_attn
+        elif self.family == "encdec":
+            enc = self.n_enc_layers * (attn + mlp + 2 * d)
+            dec = n * (2 * attn + mlp + 3 * d)  # self + cross attention
+            blocks = enc + dec
+        embed = v * d + (self.enc_seq * d if self.family == "encdec" else 0)
+        head = v * d
+        return embed + blocks + head + d  # final norm
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        total = self.param_count()
+        d = self.d_model
+        per_expert = (3 if self.gated_mlp else 2) * d * self.moe_ff
+        inactive = self.n_layers * (self.n_experts - self.top_k) * per_expert
+        return total - inactive

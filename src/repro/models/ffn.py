@@ -1,0 +1,42 @@
+"""Feed-forward networks: gated (SwiGLU/GeGLU) and plain, LUT activations.
+
+The FFN is SAL-PIM's biggest GEMV consumer (paper Fig. 3: 29.4% of GPU
+time) and where the GELU LUT applies. `engine.linear(..., act=...)` fuses
+the activation into the GEMV epilogue on the kernel path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.salpim import SalPimEngine
+from repro.distributed.api import constrain
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": (jax.random.normal(ks[0], (f, d)) * d**-0.5).astype(cfg.pdtype),
+        "w_down": (jax.random.normal(ks[1], (d, f)) * f**-0.5).astype(cfg.pdtype),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = (jax.random.normal(ks[2], (f, d)) * d**-0.5).astype(cfg.pdtype)
+    return p
+
+
+def apply_ffn(p: dict, x: Array, cfg: ModelConfig, engine: SalPimEngine) -> Array:
+    """x (..., D) -> (..., D)."""
+    if cfg.gated_mlp:
+        gate = engine.linear(x, p["w_gate"], act=cfg.activation)
+        up = engine.linear(x, p["w_up"])
+        h = gate * up
+    else:
+        h = engine.linear(x, p["w_up"], act=cfg.activation)
+    h = constrain(h, "batch", None, "model")
+    out = engine.linear(h, p["w_down"])
+    return constrain(out, "batch", None, None)

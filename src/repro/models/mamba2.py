@@ -1,0 +1,203 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked train + O(1) decode.
+
+SSD recurrence (per head h, state size N, head dim P):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T        (N x P state)
+    y_t = C_t h_t + D * x_t
+
+Training uses the chunked dual form (arXiv:2405.21060 Listing 1): within a
+chunk the computation is an attention-like quadratic form; across chunks a
+short scan carries the state. Decode is a single recurrence step — a pure
+GEMV/elementwise workload, i.e. *exactly* SAL-PIM's memory-bound regime
+(DESIGN.md §Arch-applicability): the Δ-gate softplus and gating sigmoid
+ride the LUT path.
+
+Applicability note: no softmax/attention -> the exp-LUT/QK mapping of the
+paper does not apply; the GEMV mapping and LUT softplus/sigmoid/rsqrt do.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.salpim import SalPimEngine
+from repro.distributed.api import constrain
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    din = cfg.d_inner
+    nh = cfg.ssm_heads
+    N = cfg.ssm_state
+    conv_dim = din + 2 * N
+    ks = jax.random.split(key, 5)
+    # in_proj emits [z (din), x (din), B (N), C (N), dt (nh)]
+    d_in_proj = 2 * din + 2 * N + nh
+    p = {
+        "in_proj": (jax.random.normal(ks[0], (d_in_proj, d)) * d**-0.5).astype(cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim)) * 0.1).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.pdtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01))).astype(jnp.float32),
+        "norm_g": jnp.ones((din,), cfg.pdtype),
+        "out_proj": (jax.random.normal(ks[2], (d, din)) * din**-0.5).astype(cfg.pdtype),
+    }
+    return p
+
+
+def _split_proj(zxbcdt: Array, cfg: ModelConfig):
+    din, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    x = zxbcdt[..., din:2 * din]
+    B = zxbcdt[..., 2 * din:2 * din + N]
+    C = zxbcdt[..., 2 * din + N:2 * din + 2 * N]
+    dt = zxbcdt[..., 2 * din + 2 * N:]
+    return z, x, B, C, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(K):  # K=4: unrolled taps, no gather
+        out = out + pad[:, i:i + xbc.shape[1]] * w[i]
+    return out + b
+
+
+def ssd_chunked(x: Array, dt: Array, A: Array, Bm: Array, Cm: Array,
+                chunk: int, initial_state: Array | None = None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus, >=0); A: (H,) (negative);
+    Bm/Cm: (B, S, N). Returns y (B, S, H, P), final_state (B, H, N, P).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if S % chunk:
+        # Zero-pad to a chunk multiple: dt=0 on padding means zero state
+        # contribution and unit decay — exact, not an approximation.
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        y, final = ssd_chunked(x, dt, A, Bm, Cm, chunk, initial_state)
+        return y[:, :S], final
+    nc = S // chunk
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]                  # (B, nc, L, H) negative
+    dA_cum = jnp.cumsum(dA, axis=2)                    # within-chunk cumsum
+
+    # Intra-chunk (the "attention-like" quadratic dual form):
+    # M[i,j] = C_i . B_j * exp(dA_cum_i - dA_cum_j) * dt_j  for j <= i
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]   # (B,nc,L,L,H)
+    li = jnp.arange(chunk)
+    causal = (li[:, None] >= li[None, :])[None, None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(jnp.minimum(seg, 0.0)), 0.0)
+    cb = jnp.einsum("bnic,bnjc->bnij", Cc, Bc)
+    M = cb[..., None] * decay * dtc[:, :, None, :, :]           # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", M, xc)
+
+    # Chunk states: S_n = sum_j exp(dA_cum_last - dA_cum_j) dt_j B_j x_j^T
+    last = dA_cum[:, :, -1:, :]                                  # (B,nc,1,H)
+    w_state = jnp.exp(jnp.minimum(last - dA_cum, 0.0)) * dtc     # (B,nc,L,H)
+    states = jnp.einsum("bnlh,bnlc,bnlhp->bnhcp", w_state, Bc, xc)  # (B,nc,H,N,P)
+
+    # Inter-chunk scan: carry running state with per-chunk decay.
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))                   # (B,nc,H)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp                                            # (B,H,N,P), (B,H)
+        h_new = h_prev * dec[:, :, None, None] + st
+        return h_new, h_prev
+
+    init = (jnp.zeros((Bsz, H, N, P), x.dtype) if initial_state is None
+            else initial_state)
+    final, h_prevs = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                        # (B,nc,H,N,P)
+
+    # Inter-chunk contribution: y_j += C_j exp(dA_cum_j) h_prev(chunk)
+    y_inter = jnp.einsum(
+        "bnlc,bnlh,bnhcp->bnlhp",
+        Cc, jnp.exp(dA_cum), h_prevs,
+    )
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def apply_mamba2(p: dict, x: Array, cfg: ModelConfig, engine: SalPimEngine,
+                 *, return_state: bool = False):
+    """Full-sequence Mamba2 block. x (B, S, D) -> (B, S, D)."""
+    Bsz, S, D = x.shape
+    din, N, nh, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    zxbcdt = engine.linear(x, p["in_proj"])
+    z, xs, Bm, Cm, dt = _split_proj(zxbcdt, cfg)
+
+    xbc_raw = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    xbc = engine.nl.silu(_causal_conv(xbc_raw, p["conv_w"].astype(x.dtype),
+                                      p["conv_b"].astype(x.dtype)))
+    xs, Bm, Cm = xbc[..., :din], xbc[..., din:din + N], xbc[..., din + N:]
+
+    dt = engine.nl.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(Bsz, S, nh, P)
+    xh = constrain(xh, "batch", None, "model", None)
+    y, state = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                           Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                           cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, din).astype(x.dtype)
+    y = engine.rmsnorm(y * engine.nl.silu(z), p["norm_g"], cfg.norm_eps)
+    out = engine.linear(y, p["out_proj"])
+    if return_state:
+        # Pre-conv tail: the decode step's conv window continuation.
+        conv_tail = xbc_raw[:, S - (cfg.ssm_conv - 1):]
+        return out, state, conv_tail
+    return out
+
+
+def mamba2_decode_step(p: dict, x: Array, ssm_state: Array, conv_state: Array,
+                       cfg: ModelConfig, engine: SalPimEngine):
+    """One-token recurrence. x (B, D); ssm_state (B, H, N, P);
+    conv_state (B, K-1, conv_dim) raw pre-conv window. Returns
+    (out (B, D), new_ssm_state, new_conv_state)."""
+    Bsz, D = x.shape
+    din, N, nh, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    K = cfg.ssm_conv
+    zxbcdt = engine.linear(x, p["in_proj"])
+    z, xs, Bm, Cm, dt = _split_proj(zxbcdt, cfg)
+
+    xbc_new = jnp.concatenate([xs, Bm, Cm], axis=-1)            # (B, conv_dim)
+    window = jnp.concatenate([conv_state, xbc_new[:, None]], axis=1)  # (B,K,Cd)
+    conv_w = p["conv_w"].astype(x.dtype)
+    conv = jnp.sum(window * conv_w[None], axis=1) + p["conv_b"].astype(x.dtype)
+    conv = engine.nl.silu(conv)
+    xs, Bm, Cm = conv[..., :din], conv[..., din:din + N], conv[..., din + N:]
+    new_conv_state = window[:, 1:]
+
+    dt = engine.nl.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])                                # (B, nh)
+    xh = xs.reshape(Bsz, nh, P).astype(jnp.float32)
+    # h = h * dA + dt * B x^T   (pure GEMV/outer-product — the PIM regime)
+    upd = dt[:, :, None, None] * Bm[:, None, :, None].astype(jnp.float32) \
+        * xh[:, :, None, :]
+    new_state = ssm_state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhcp,bc->bhp", new_state, Cm.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(Bsz, din).astype(x.dtype)
+    y = engine.rmsnorm(y * engine.nl.silu(z), p["norm_g"], cfg.norm_eps)
+    out = engine.linear(y, p["out_proj"])
+    return out, new_state, new_conv_state

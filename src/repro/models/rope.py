@@ -1,0 +1,58 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the head_dim rotation frequencies into (temporal, height,
+width) sections, each driven by its own position stream. For text-only
+inputs all three streams are equal and M-RoPE reduces exactly to RoPE —
+the property tests assert this. The vision frontend (stubbed) would feed
+distinct h/w positions per patch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_cos_sin(positions: Array, head_dim: int, theta: float) -> tuple[Array, Array]:
+    """positions (...,) int -> cos/sin of shape (..., head_dim/2)."""
+    freqs = rope_freqs(head_dim, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(
+    positions: Array,            # (3, ...) temporal/height/width position ids
+    head_dim: int,
+    theta: float,
+    sections: tuple[int, ...],   # half-dim split, sums to head_dim//2
+) -> tuple[Array, Array]:
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    freqs = rope_freqs(head_dim, theta)
+    ang_all = positions[..., None].astype(jnp.float32) * freqs  # (3, ..., half)
+    parts_c, parts_s = [], []
+    start = 0
+    for axis, width in enumerate(sections):
+        sl = ang_all[axis, ..., start:start + width]
+        parts_c.append(jnp.cos(sl))
+        parts_s.append(jnp.sin(sl))
+        start += width
+    return jnp.concatenate(parts_c, -1), jnp.concatenate(parts_s, -1)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x (..., S, H, D); cos/sin (..., S, D/2) broadcast over heads.
+
+    Rotate-half convention (llama/qwen): pair (x[..:d/2], x[d/2:..]).
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)   # broadcast over head axis
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)

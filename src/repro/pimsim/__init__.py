@@ -1,0 +1,1 @@
+"""Analytical SAL-PIM performance model (paper-evaluation reproduction)."""

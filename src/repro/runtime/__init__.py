@@ -1,0 +1,1 @@
+"""Training runtime: optimizer, fault-tolerant loop, checkpointing."""

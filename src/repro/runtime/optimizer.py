@@ -1,0 +1,140 @@
+"""AdamW + schedules from scratch (no optax in this container).
+
+Moments are fp32 and inherit the parameter shardings — with FSDP rules on
+(sharding.py) this is ZeRO-3: params, grads and both moments all live
+sharded on the `data` axis and only materialize per-layer inside the scan.
+
+Also provides global-norm clipping and microbatch gradient accumulation
+(the accumulate-then-reduce pattern: the psum over the data axis happens
+once per *step*, not per microbatch — XLA overlaps it with the tail of
+the backward pass).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: Array          # () int32
+    mu: Any              # fp32 pytree like params
+    nu: Any              # fp32 pytree like params
+
+
+def init_opt_state(params: Any) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros))
+
+
+def lr_at(cfg: AdamWConfig, step: Array) -> Array:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def global_norm(tree: Any) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any,
+                 state: OptState) -> tuple[Any, OptState, dict]:
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    grad_norm = jnp.zeros(())
+    if cfg.clip_norm is not None:
+        grads, grad_norm = clip_by_global_norm(grads, cfg.clip_norm)
+
+    b1, b2 = cfg.b1, cfg.b2
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1**t
+    bc2 = 1 - b2**t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 1:  # decoupled weight decay (skip scalars/norm gains)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": grad_norm}
+    return new_p, OptState(step=step, mu=new_m, nu=new_v), metrics
+
+
+def accumulate_grads(loss_fn: Callable, params: Any, batch: dict,
+                     n_micro: int) -> tuple[Array, Any, dict]:
+    """Split the batch into n_micro microbatches; average grads via scan.
+
+    The collective reduction of the final grads (under pjit sharding)
+    happens once, after the scan — compute/communication overlap comes
+    from XLA scheduling the first layers' all-gathers of step N+1 against
+    the reduce of step N.
+    """
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, grads, metrics
+
+    def split(x):
+        return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        acc_loss, acc_g = carry
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb)
+        acc_g = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                             acc_g, grads)
+        return (acc_loss + loss, acc_g), metrics
+
+    (tot_loss, tot_g), metrics = jax.lax.scan(
+        body, (jnp.zeros(()), zero_g), micro)
+    grads = jax.tree.map(lambda g: (g / n_micro), tot_g)
+    last_metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return tot_loss / n_micro, grads, last_metrics

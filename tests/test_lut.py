@@ -1,0 +1,110 @@
+"""LUT linear-interpolation: correctness, error bounds, paper's section
+claim (>=32 sections keeps accuracy), range reduction, onehot==gather."""
+from __future__ import annotations
+
+import hypothesis as hyp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lut as L
+
+
+BANK = L.LutBank.create(64)
+
+
+def test_guard_sections_left_right():
+    t = L.exp_table(64)  # left guard = 0.0, right extends the line
+    x = jnp.array([-50.0, -12.0, 0.0, 0.5])
+    y = L.apply_table(x, t)
+    assert y[0] == 0.0                       # below range -> 0
+    np.testing.assert_allclose(y[2], 1.0, atol=5e-3)
+    assert y[3] > 1.0                        # right of 0: extends last line
+
+
+def test_gelu_identity_tail():
+    t = L.gelu_table(64)
+    x = jnp.array([9.0, 20.0, 100.0])
+    np.testing.assert_allclose(L.apply_table(x, t), x, rtol=1e-6)
+    xneg = jnp.array([-9.0, -50.0])
+    np.testing.assert_allclose(L.apply_table(xneg, t), 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("name,fn,lo,hi", [
+    ("gelu", lambda x: jax.nn.gelu(x, approximate=True), -7.5, 7.5),
+    ("silu", jax.nn.silu, -7.5, 7.5),
+    ("tanh", jnp.tanh, -3.9, 3.9),
+    ("sigmoid", jax.nn.sigmoid, -7.9, 7.9),
+    ("softplus", jax.nn.softplus, -9.5, 9.5),
+])
+def test_inrange_accuracy_64(name, fn, lo, hi):
+    t = getattr(BANK, name)
+    x = jnp.linspace(lo, hi, 4001)
+    err = jnp.max(jnp.abs(fn(x) - L.apply_table(x, t)))
+    assert err < 2e-2, (name, float(err))
+
+
+def test_sections_error_decreases():
+    """Error ~ O(h^2): quadrupling sections ~ quarters the max error."""
+    x = jnp.linspace(-7.9, 7.9, 8001)
+    exact = jax.nn.gelu(x, approximate=True)
+    errs = []
+    for s in (16, 32, 64, 128):
+        errs.append(float(jnp.max(jnp.abs(
+            exact - L.apply_table(x, L.gelu_table(s))))))
+    assert errs[0] > errs[1] > errs[2] > errs[3]
+    assert errs[1] / errs[3] > 6  # ~16x expected, allow slack
+
+
+def test_paper_claim_32_sections_sufficient():
+    """>=32 sections: logit-level deviation must stay below bf16 noise
+    (the paper's 'no accuracy drop' operating point)."""
+    x = jnp.linspace(-7.9, 7.9, 8001)
+    exact = jax.nn.gelu(x, approximate=True)
+    err32 = float(jnp.max(jnp.abs(exact - L.apply_table(x, L.gelu_table(32)))))
+    assert err32 < 0.05
+
+
+def test_onehot_matmul_equals_gather():
+    x = jax.random.normal(jax.random.PRNGKey(0), (513,)) * 6
+    for t in (BANK.gelu, BANK.exp, BANK.tanh):
+        a = L.apply_table(x, t)
+        b = L.apply_table_onehot(x, t)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@hyp.given(st.floats(min_value=1e-30, max_value=1e30,
+                     allow_nan=False, allow_infinity=False))
+@hyp.settings(max_examples=200, deadline=None)
+def test_range_reduced_recip_property(x):
+    got = float(L.lut_reciprocal(jnp.float32(x), BANK.recip))
+    assert got == pytest.approx(1.0 / x, rel=2e-3)
+
+
+@hyp.given(st.floats(min_value=1e-30, max_value=1e30,
+                     allow_nan=False, allow_infinity=False))
+@hyp.settings(max_examples=200, deadline=None)
+def test_range_reduced_rsqrt_property(x):
+    got = float(L.lut_rsqrt(jnp.float32(x), BANK.rsqrt))
+    assert got == pytest.approx(x ** -0.5, rel=2e-3)
+
+
+@hyp.given(st.integers(min_value=2, max_value=200),
+           st.floats(min_value=-30, max_value=30, allow_nan=False))
+@hyp.settings(max_examples=100, deadline=None)
+def test_section_index_bounds(sections, x):
+    t = L.build_table(np.tanh, -4, 4, sections)
+    idx = int(L.section_index(jnp.float32(x), t))
+    assert 0 <= idx <= sections + 1
+    if -4 <= x < 4:
+        assert 1 <= idx <= sections
+
+
+def test_interp_is_exact_on_linear_functions():
+    """A piecewise-linear table of a linear fn reproduces it exactly."""
+    t = L.build_table(lambda v: 3.0 * v - 1.0, -2, 2, 17)
+    x = jnp.linspace(-1.99, 1.99, 257)
+    np.testing.assert_allclose(L.apply_table(x, t), 3.0 * x - 1.0,
+                               rtol=1e-5, atol=1e-5)

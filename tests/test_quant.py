@@ -1,0 +1,96 @@
+"""S-ALU fixed-point datapath: Q-format roundtrip, MAC/shift/saturate
+semantics, int8 per-row path, and the paper's 16-bit accuracy claim proxy."""
+from __future__ import annotations
+
+import hypothesis as hyp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant as Q
+
+
+def test_qformat_roundtrip_error_bound():
+    fmt = Q.QFormat(frac_bits=10)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4096,)) * 3
+    rt = fmt.dequantize(fmt.quantize(x))
+    assert float(jnp.max(jnp.abs(rt - x))) <= 0.5 / fmt.scale + 1e-7
+
+
+@hyp.given(st.integers(min_value=0, max_value=14))
+@hyp.settings(max_examples=15, deadline=None)
+def test_qformat_saturates(frac_bits):
+    fmt = Q.QFormat(frac_bits=frac_bits)
+    big = jnp.array([1e9, -1e9])
+    q = fmt.quantize(big)
+    assert int(q[0]) == fmt.max_int and int(q[1]) == fmt.min_int
+
+
+def test_fixed_linear_matches_float_within_quant_noise():
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (128, 256)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 256))
+    b = jax.random.normal(jax.random.PRNGKey(3), (128,)) * 0.1
+    wq = Q.quantize_weights_fixed(w)
+    bq = Q.quantize_bias_fixed(b)
+    out = Q.fixed_linear(x, wq, bq)
+    exact = x @ w.T + b
+    assert float(jnp.max(jnp.abs(out - exact))) < 0.02
+
+
+def test_requantize_shift_and_saturate():
+    acc = jnp.array([1 << 20, -(1 << 20), 123456, -7], jnp.int32)
+    out = Q.requantize_i32_to_i16(acc, shift=4)
+    assert int(out[0]) == 32767          # saturated high
+    assert int(out[1]) == -32768         # saturated low
+    assert int(out[2]) == 123456 >> 4
+    assert int(out[3]) == -7 >> 4        # arithmetic shift (rounds to -inf)
+
+
+@hyp.given(st.lists(st.integers(min_value=-512, max_value=511),
+                    min_size=4, max_size=64))
+@hyp.settings(max_examples=50, deadline=None)
+def test_fixed_gemv_is_exact_integer_math(vals):
+    """With shift=0 the datapath is plain integer algebra."""
+    n = len(vals)
+    w = jnp.asarray(vals, jnp.int16).reshape(1, n)
+    x = jnp.ones((n,), jnp.int16)
+    out = Q.fixed_gemv(w, x, shift=0)
+    expect = int(np.clip(sum(vals), -32768, 32767))
+    assert int(out[0]) == expect
+
+
+def test_int8_rowwise_quant_error():
+    w = jax.random.normal(jax.random.PRNGKey(4), (64, 128))
+    w8, s = Q.quantize_int8_rowwise(w)
+    deq = w8.astype(jnp.float32) * s[:, None]
+    rel = float(jnp.max(jnp.abs(deq - w)) / jnp.max(jnp.abs(w)))
+    assert rel < 1.0 / 127
+
+
+def test_paper_claim_16bit_model_accuracy_proxy():
+    """Paper Sec 4.1: Q16 costs ~2.8% accuracy on GPT-2-medium. Proxy: a
+    reduced GPT-2 forward in fixed16 must keep argmax agreement high and
+    logit RMSE small relative to logit scale."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.core.salpim import SalPimEngine, SalPimConfig
+    from repro.models import api
+
+    cfg = get_config("gpt2_medium", smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key, cfg)
+    toks = jax.random.randint(key, (4, 32), 0, cfg.vocab)
+    exact = api.forward_logits(params, {"tokens": toks}, cfg,
+                               SalPimEngine.create(SalPimConfig()))
+    fixed = api.forward_logits(
+        params, {"tokens": toks}, cfg,
+        SalPimEngine.create(SalPimConfig(quant="fixed16")))
+    agree = float(jnp.mean(
+        (jnp.argmax(exact, -1) == jnp.argmax(fixed, -1)).astype(jnp.float32)))
+    rmse = float(jnp.sqrt(jnp.mean((exact - fixed) ** 2)))
+    scale = float(jnp.std(exact))
+    assert agree > 0.9, agree
+    assert rmse < 0.15 * scale, (rmse, scale)

@@ -1,0 +1,84 @@
+"""Roofline machinery: HLO collective parser, term math, input specs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, get_config, input_specs
+from repro.launch import roofline as R
+
+
+HLO_SAMPLE = """
+HloModule test
+%add { ... }
+ENTRY %main {
+  %p0 = f32[8,256]{1,0} parameter(0)
+  %dot = f32[8,256]{1,0} dot(%p0, %p0)
+  ROOT %all-reduce = f32[8,256]{1,0} all-reduce(%dot), replica_groups=[8,8]<=[64]
+}
+"""
+
+HLO_ASYNC = """
+ENTRY %main {
+  %p0 = bf16[4,128]{1,0} parameter(0)
+  %ag-start = (bf16[4,128]{1,0}, bf16[32,128]{1,0}) all-gather-start(%p0), dimensions={0}
+  %ag-done = bf16[32,128]{1,0} all-gather-done(%ag-start)
+  %cp = bf16[4,128]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  ROOT %rs = bf16[1,128]{1,0} reduce-scatter(bf16[4,128]{1,0} %p0), dimensions={0}
+}
+"""
+
+
+def test_collective_parser_resolves_operands():
+    out = R.collective_bytes(HLO_SAMPLE)
+    assert out["per_kind_count"]["all-reduce"] == 1
+    assert out["per_kind_bytes"]["all-reduce"] == 8 * 256 * 4
+
+
+def test_collective_parser_async_and_kinds():
+    out = R.collective_bytes(HLO_ASYNC)
+    c = out["per_kind_count"]
+    assert c["all-gather"] == 1          # start counted, done skipped
+    assert c["collective-permute"] == 1
+    assert c["reduce-scatter"] == 1
+    b = out["per_kind_bytes"]
+    assert b["all-gather"] == 4 * 128 * 2
+    assert b["reduce-scatter"] == 4 * 128 * 2
+
+
+def test_roofline_terms_and_bottleneck():
+    r = R.roofline_terms({"flops": 197e12, "bytes accessed": 819e9 / 2},
+                         coll_bytes=0)
+    assert r["t_compute"] == pytest.approx(1.0)
+    assert r["t_memory"] == pytest.approx(0.5)
+    assert r["bottleneck"] == "compute"
+    r2 = R.roofline_terms({"flops": 1e9, "bytes accessed": 1e9},
+                          coll_bytes=50e9)
+    assert r2["bottleneck"] == "collective"
+    assert r2["t_collective"] == pytest.approx(1.0)
+
+
+def test_model_flops_train_vs_serve():
+    cfg = get_config("qwen2_1_5b")
+    n = cfg.param_count()
+    assert R.model_flops(cfg, "train", 1000) == pytest.approx(6 * n * 1000)
+    assert R.model_flops(cfg, "decode", 128) == pytest.approx(2 * n * 128)
+    moe = get_config("olmoe_1b_7b")
+    assert moe.active_param_count() < moe.param_count()
+
+
+@pytest.mark.parametrize("arch", ["qwen2_1_5b", "whisper_large_v3",
+                                  "qwen2_vl_2b", "mamba2_370m"])
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k", "decode_32k"])
+def test_input_specs_no_allocation(arch, shape):
+    cfg = get_config(arch)
+    specs = input_specs(cfg, SHAPES[shape])
+    for v in jax.tree.leaves(specs):
+        assert isinstance(v, jax.ShapeDtypeStruct)
+    if shape == "train_4k":
+        assert specs["tokens"].shape == (256, 4096)
+        if cfg.family == "encdec":
+            assert specs["frames"].shape[1] == cfg.enc_seq
+    if shape == "decode_32k":
+        assert specs["token"].shape == (128,)
