@@ -3,7 +3,9 @@
 slots (slot-based admission, per-request lengths, EOS release).
 
     PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --paged --page-size 16
 """
+import argparse
 import time
 
 import numpy as np
@@ -16,18 +18,36 @@ from repro.serving.engine import GenConfig, ServingEngine
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--paged", action="store_true",
+                    help="use the paged KV cache (shared page pool + "
+                         "block tables) instead of dense per-slot arenas")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page pool size (paged mode; default: dense-equal)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=10)
+    args = ap.parse_args()
+
     cfg = get_config("qwen2-1.5b", smoke=True)
     engine = SalPimEngine.create(SalPimConfig(nonlinear_mode="lut"))
     params = api.init_params(jax.random.PRNGKey(0), cfg)
 
-    eng = ServingEngine(params, cfg, engine, slots=4, max_len=64,
-                        gen=GenConfig(temperature=0.0, stop_on_eos=False))
+    eng = ServingEngine(params, cfg, engine, slots=args.slots,
+                        max_len=args.max_len,
+                        gen=GenConfig(temperature=0.0, stop_on_eos=False),
+                        paged=args.paged, page_size=args.page_size,
+                        num_pages=args.num_pages)
     rng = np.random.RandomState(0)
     uids = []
-    for i in range(10):
+    for i in range(args.requests):
         prompt = rng.randint(2, cfg.vocab, size=rng.randint(4, 12))
         uids.append(eng.submit(prompt, max_new_tokens=int(rng.randint(5, 15))))
-    print(f"submitted {len(uids)} requests into 4 slots")
+    mode = (f"paged (page_size={args.page_size}, "
+            f"{eng.allocator.num_pages} pages)" if args.paged else "dense")
+    print(f"submitted {len(uids)} requests into {args.slots} slots [{mode}]")
 
     t0 = time.perf_counter()
     steps = 0
@@ -37,10 +57,15 @@ def main():
         if n == 0 and not eng.queue and all(a is None for a in eng.active):
             break
     dt = time.perf_counter() - t0
-    done = 0
-    # requests were popped from queue; count completions via step() bookkeeping
+    toks = sum(len(r.generated) for r in eng.finished)
     print(f"drained in {steps} decode steps, {dt:.2f}s "
           f"({steps/dt:.1f} steps/s on CPU)")
+    print(f"finished {len(eng.finished)}/{len(uids)} requests, "
+          f"{toks} tokens generated")
+    if args.paged:
+        a = eng.allocator
+        print(f"page pool: {a.used_pages} in use / {a.num_pages - 1} usable "
+              f"(all should be free after drain: {a.free_pages})")
 
 
 if __name__ == "__main__":

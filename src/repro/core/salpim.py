@@ -133,6 +133,24 @@ class SalPimEngine:
             q, k, v, length, scale=scale, exp_table=exp_table,
             softcap=softcap, window=window, impl=self.config.impl)
 
+    def paged_decode_attention(self, q: Array, k_pages: Array,
+                               v_pages: Array, block_tables: Array,
+                               length: Array, *,
+                               scale: Optional[float] = None,
+                               softcap: Optional[float] = None,
+                               window=None) -> Array:
+        """Decode attention reading K/V through a block table
+        (serving/kvcache.py pool layout)."""
+        exp_table = self.nl.bank.exp if self.nl.mode == "lut" else None
+        if self.config.impl == "reference":
+            return ref_k.paged_attention_ref(
+                q, k_pages, v_pages, block_tables, length, scale=scale,
+                exp_table=exp_table, softcap=softcap, window=window)
+        return ops.pim_paged_attention(
+            q, k_pages, v_pages, block_tables, length, scale=scale,
+            exp_table=exp_table, softcap=softcap, window=window,
+            impl=self.config.impl)
+
     # -- C2: norms -------------------------------------------------------------
     def layernorm(self, x: Array, gamma: Array, beta: Array | None,
                   eps: float = 1e-5) -> Array:

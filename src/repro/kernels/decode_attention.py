@@ -8,11 +8,14 @@ One token attends to an S-entry KV cache. SAL-PIM's mapping for MHA:
   * The S-ALU `max` op feeding the exp LUT becomes the online-softmax
     running max; exp optionally goes through the same 64-section LUT
     table as the paper.
-  * Bank-sequential K/V concatenation becomes the ring KV cache append
-    (serving/kvcache.py); this kernel just reads the cache up to `length`.
+  * Bank-sequential K/V concatenation becomes the cache append — dense
+    per-slot arenas here, or page-granular through the block-table pool
+    (serving/kvcache.py + kernels/paged_attention.py); this kernel just
+    reads a dense cache up to `length`.
   * The C-ALU merge of per-bank partials becomes the (m, l, acc) merge
     across seq blocks — and, for sequence-parallel long-context decode,
-    the same algebra merges per-chip partials (distributed/spdecode.py).
+    the same algebra merges per-chip partials
+    (distributed/collectives.py `merge_partial_softmax`).
 
 Grid: (B * Hkv, S_blocks); q block (group, D) where group = H // Hkv (GQA
 groups share one K/V stream — one HBM read serves `group` query heads).

@@ -21,6 +21,7 @@ from repro.kernels import ref as ref_k
 from repro.kernels import lut_interp as lut_k
 from repro.kernels import gemv_pim as gemv_k
 from repro.kernels import decode_attention as attn_k
+from repro.kernels import paged_attention as paged_k
 from repro.kernels import layernorm_lut as ln_k
 from repro.kernels import softmax_lut as sm_k
 
@@ -107,6 +108,23 @@ def pim_decode_attention(q, k, v, length, *, scale=None,
     return attn_k.decode_attention(
         q, k, v, length, scale=scale, exp_table=exp_table, softcap=softcap,
         window=window, block_s=block_s, interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "scale", "softcap",
+                                             "window"))
+def pim_paged_attention(q, k_pages, v_pages, block_tables, length, *,
+                        scale=None, exp_table: LutTable | None = None,
+                        softcap=None, window=None,
+                        impl: str = "reference") -> jax.Array:
+    """Decode attention over a paged KV pool (see serving/kvcache.py)."""
+    if impl == "reference":
+        return ref_k.paged_attention_ref(
+            q, k_pages, v_pages, block_tables, length, scale=scale,
+            exp_table=exp_table, softcap=softcap, window=window)
+    return paged_k.paged_attention(
+        q, k_pages, v_pages, block_tables, length, scale=scale,
+        exp_table=exp_table, softcap=softcap, window=window,
+        interpret=(impl == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "eps", "rms", "plus_one",

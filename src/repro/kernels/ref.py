@@ -137,6 +137,41 @@ def decode_attention_ref(
     return out.reshape(B, H, D).astype(q.dtype)
 
 
+def paged_attention_ref(
+    q: Array,
+    k_pages: Array,
+    v_pages: Array,
+    block_tables: Array,
+    length: Array,
+    *,
+    scale: float | None = None,
+    exp_table: LutTable | None = None,
+    softcap: float | None = None,
+    window: int | None = None,
+) -> Array:
+    """Oracle for kernels/paged_attention.py.
+
+    Gathers each sequence's pages back into a dense (B, Hkv, S, D) view
+    via its block table, then defers to `decode_attention_ref` — paged
+    reads must be *exactly* dense reads on the gathered layout.
+
+    q: (B, H, D); k_pages/v_pages: (P, Hkv, page, D) shared pool;
+    block_tables: (B, n_pages) int32 physical page ids; length: (B,).
+    """
+    B = q.shape[0]
+    Hkv, page = k_pages.shape[1], k_pages.shape[2]
+    n_pages = block_tables.shape[1]
+    D = k_pages.shape[3]
+    # (B, n_pages, Hkv, page, D) -> (B, Hkv, n_pages * page, D)
+    k = jnp.moveaxis(k_pages[block_tables], 2, 1).reshape(
+        B, Hkv, n_pages * page, D)
+    v = jnp.moveaxis(v_pages[block_tables], 2, 1).reshape(
+        B, Hkv, n_pages * page, D)
+    return decode_attention_ref(
+        q, k, v, length, scale=scale, exp_table=exp_table,
+        softcap=softcap, window=window)
+
+
 def layernorm_lut_ref(
     x: Array,
     gamma: Array,

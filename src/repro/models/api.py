@@ -95,11 +95,22 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig, engine: SalPimEngine,
     return tf.prefill(params, batch["tokens"], cfg, engine, max_len=max_len)
 
 
-def decode_step(params: dict, token: Array, cache: Cache, cfg: ModelConfig,
+def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,
                 engine: SalPimEngine):
+    """`cache` may be a dense `Cache` or a `serving.kvcache.PagedCache`;
+    transformer.decode_step dispatches on the pytree type."""
     if cfg.family == "encdec":
         return encdec.decode_step(params, token, cache, cfg, engine)
     return tf.decode_step(params, token, cache, cfg, engine)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int, max_pages: int):
+    """Paged KV cache (dense/moe families; see serving/kvcache.py)."""
+    from repro.serving.kvcache import init_paged_cache as _init
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"paged cache unsupported for family {cfg.family!r}")
+    return _init(cfg, batch, num_pages, page_size, max_pages)
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:

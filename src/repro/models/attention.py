@@ -157,6 +157,53 @@ def _quantize_vec(x: Array) -> tuple[Array, Array]:
     return q, scale.astype(jnp.bfloat16)
 
 
+def _decode_qkv(p: dict, x: Array, cfg: ModelConfig, engine: SalPimEngine,
+                cos: Array | None, sin: Array | None):
+    """Single-token projections + RoPE shared by the decode paths.
+    x (B, D) -> q (B, H, Dh), k/v (B, Hkv, Dh)."""
+    B, _ = x.shape
+    q = engine.linear(x, p["wq"], p.get("bq")).reshape(B, cfg.n_heads, cfg.head_dim)
+    k = engine.linear(x, p["wk"], p.get("bk")).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+    v = engine.linear(x, p["wv"], p.get("bv")).reshape(B, cfg.n_kv_heads, cfg.head_dim)
+    if cos is not None:
+        q = apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
+        k = apply_rope(k[:, None], cos[:, None], sin[:, None])[:, 0]
+    return q, k, v
+
+
+def attention_decode_paged(
+    p: dict,
+    x: Array,                      # (B, D) one new token per sequence
+    k_pages: Array,                # (P, Hkv, page, Dh) shared pool
+    v_pages: Array,
+    block_tables: Array,           # (B, n_pages) int32
+    lengths: Array,                # (B,) tokens already in cache
+    cfg: ModelConfig,
+    engine: SalPimEngine,
+    *,
+    cos: Array | None,
+    sin: Array | None,
+    window: Optional[int] = None,
+):
+    """One decode step against a paged cache; returns (out, k', v')."""
+    from repro.serving.kvcache import append_kv_pages
+
+    B, _ = x.shape
+    q, k, v = _decode_qkv(p, x, cfg, engine, cos, sin)
+
+    # Bank-sequential concat, page-granular: append at each slot's length.
+    k_pages, v_pages = append_kv_pages(
+        k_pages, v_pages, block_tables, lengths, k, v)
+    valid = lengths + 1
+
+    scale = cfg.attn_scale if cfg.attn_scale is not None else cfg.head_dim ** -0.5
+    out = engine.paged_decode_attention(
+        q, k_pages, v_pages, block_tables, valid, scale=scale,
+        softcap=cfg.attn_softcap, window=window)
+    out = engine.linear(out.reshape(B, -1), p["wo"])
+    return out, k_pages, v_pages
+
+
 def attention_decode(
     p: dict,
     x: Array,                      # (B, D) one new token per sequence
@@ -173,13 +220,8 @@ def attention_decode(
     kv_scales: Optional[tuple] = None,  # (k_scale, v_scale) int8-cache mode
 ):
     """One decode step; returns (out (B, D), new_k, new_v[, new_scales])."""
-    B, D = x.shape
-    q = engine.linear(x, p["wq"], p.get("bq")).reshape(B, cfg.n_heads, cfg.head_dim)
-    k = engine.linear(x, p["wk"], p.get("bk")).reshape(B, cfg.n_kv_heads, cfg.head_dim)
-    v = engine.linear(x, p["wv"], p.get("bv")).reshape(B, cfg.n_kv_heads, cfg.head_dim)
-    if cos is not None:
-        q = apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
-        k = apply_rope(k[:, None], cos[:, None], sin[:, None])[:, 0]
+    B, _ = x.shape
+    q, k, v = _decode_qkv(p, x, cfg, engine, cos, sin)
 
     int8_kv = kv_scales is not None
     if int8_kv:

@@ -94,18 +94,12 @@ def apply_decoder_block_prefill(
     return x + h, (ck, cv)
 
 
-def apply_decoder_block_decode(
-    p: dict, x: Array, cache_k: Array, cache_v: Array, lengths: Array,
-    cfg: ModelConfig, engine: SalPimEngine, *, cos, sin, window,
-    kv_scales=None,
-):
-    """Single-token step. x (B, D). Returns (x', k', v'[, scales])."""
+def _decode_block_skeleton(p, x, cfg, engine, attn_fn):
+    """Shared single-token block: norm/attn/residual/ffn around `attn_fn`,
+    which maps the normed hidden to (attn_out, *cache_outputs)."""
     h = apply_norm(p["ln1"], x, cfg, engine)
-    res = attn_lib.attention_decode(
-        p["attn"], h, cache_k, cache_v, lengths, cfg, engine,
-        cos=cos, sin=sin, window=window, kv_scales=kv_scales)
-    h, ck, cv = res[0], res[1], res[2]
-    scales = res[3:] if kv_scales is not None else None
+    res = attn_fn(h)
+    h, cache_out = res[0], res[1:]
     if cfg.post_norms:
         h = apply_norm(p["post_ln1"], h, cfg, engine)
     x = x + h
@@ -114,6 +108,30 @@ def apply_decoder_block_decode(
          else ffn_lib.apply_ffn(p["ffn"], h, cfg, engine))
     if cfg.post_norms:
         h = apply_norm(p["post_ln2"], h, cfg, engine)
-    if scales is not None:
-        return x + h, ck, cv, scales[0], scales[1]
-    return x + h, ck, cv
+    return (x + h, *cache_out)
+
+
+def apply_decoder_block_decode_paged(
+    p: dict, x: Array, k_pages: Array, v_pages: Array, block_tables: Array,
+    lengths: Array, cfg: ModelConfig, engine: SalPimEngine, *, cos, sin,
+    window,
+):
+    """Single-token step against a paged cache. Returns (x', k', v')."""
+    return _decode_block_skeleton(
+        p, x, cfg, engine,
+        lambda h: attn_lib.attention_decode_paged(
+            p["attn"], h, k_pages, v_pages, block_tables, lengths, cfg,
+            engine, cos=cos, sin=sin, window=window))
+
+
+def apply_decoder_block_decode(
+    p: dict, x: Array, cache_k: Array, cache_v: Array, lengths: Array,
+    cfg: ModelConfig, engine: SalPimEngine, *, cos, sin, window,
+    kv_scales=None,
+):
+    """Single-token step. x (B, D). Returns (x', k', v'[, scales])."""
+    return _decode_block_skeleton(
+        p, x, cfg, engine,
+        lambda h: attn_lib.attention_decode(
+            p["attn"], h, cache_k, cache_v, lengths, cfg, engine,
+            cos=cos, sin=sin, window=window, kv_scales=kv_scales))

@@ -389,9 +389,16 @@ def _hybrid_prefill(params, x, cfg, engine, cos, sin, lengths, max_len):
 # Decode: one token per call (the paper's generation-stage workload)
 # ---------------------------------------------------------------------------
 
-def decode_step(params: dict, token: Array, cache: Cache, cfg: ModelConfig,
-                engine: SalPimEngine) -> tuple[Array, Cache]:
-    """token (B,) int32 -> (logits (B, V), updated cache)."""
+def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,
+                engine: SalPimEngine):
+    """token (B,) int32 -> (logits (B, V), updated cache).
+
+    `cache` is either a dense `Cache` or a `serving.kvcache.PagedCache`;
+    the paged form routes attention through the block-table kernel.
+    """
+    from repro.serving.kvcache import PagedCache
+    if isinstance(cache, PagedCache):
+        return _decode_step_paged(params, token, cache, cfg, engine)
     B = token.shape[0]
     x = _embed(params, token[:, None], cfg, positions=cache.lengths[:, None] if cfg.learned_pos_emb else None)[:, 0]
     cos, sin = _rope(cfg, cache.lengths)
@@ -436,6 +443,38 @@ def decode_step(params: dict, token: Array, cache: Cache, cfg: ModelConfig,
     else:
         raise ValueError(cfg.family)
 
+    return _logits(params, x, cfg, engine), new_cache
+
+
+def _decode_step_paged(params: dict, token: Array, cache, cfg: ModelConfig,
+                       engine: SalPimEngine):
+    """Paged decode: the per-layer KV pools ride through the layer scan;
+    the block table and lengths are shared across layers."""
+    from repro.serving.kvcache import PagedCache
+
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"paged cache unsupported for family {cfg.family!r}")
+    if cfg.kv_dtype == "int8":
+        raise ValueError("paged cache does not support int8 KV yet")
+
+    x = _embed(params, token[:, None], cfg,
+               positions=cache.lengths[:, None] if cfg.learned_pos_emb
+               else None)[:, 0]
+    cos, sin = _rope(cfg, cache.lengths)
+
+    def body(h, layer):
+        bp, window, kp, vp = layer
+        h, nk, nv = blk.apply_decoder_block_decode_paged(
+            bp, h, kp, vp, cache.block_tables, cache.lengths, cfg, engine,
+            cos=cos, sin=sin, window=window)
+        return h, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["blocks"], _windows(cfg), cache.k_pages,
+                  cache.v_pages))
+    new_cache = PagedCache(lengths=cache.lengths + 1,
+                           block_tables=cache.block_tables,
+                           k_pages=nk, v_pages=nv)
     return _logits(params, x, cfg, engine), new_cache
 
 

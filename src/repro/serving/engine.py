@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.salpim import SalPimEngine
 from repro.models import api as model_api
+from repro.serving import kvcache as kv
 from repro.models.config import ModelConfig
 from repro.models.transformer import Cache
 from repro.serving.sampling import sample
@@ -101,11 +102,25 @@ class Request:
 
 
 class ServingEngine:
-    """Slot-based continuous batching over a fixed decode batch width."""
+    """Slot-based continuous batching over a fixed decode batch width.
+
+    Two cache backends behind one decode_step interface:
+
+      * dense (default) — every slot owns a `max_len` KV arena;
+      * paged (`paged=True`) — slots share a page pool (kvcache.py).
+        Admission is gated on the allocator's watermark: a request is
+        admitted only when its worst-case page count can be reserved,
+        so decode never runs out of pages mid-sequence. Pages are
+        physically allocated at decode-step boundaries and freed the
+        moment a request completes — mixed prompt/output lengths no
+        longer each pin a full `max_len` arena.
+    """
 
     def __init__(self, params: dict, model_cfg: ModelConfig,
                  engine: SalPimEngine, *, slots: int, max_len: int,
-                 gen: GenConfig = GenConfig()):
+                 gen: GenConfig = GenConfig(), paged: bool = False,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 seed: int = 0):
         self.params = params
         self.cfg = model_cfg
         self.engine = engine
@@ -114,9 +129,27 @@ class ServingEngine:
         self.gen = gen
         self.queue: list[Request] = []
         self.active: list[Optional[Request]] = [None] * slots
-        self.cache = model_api.init_cache(model_cfg, slots, max_len)
+        self.finished: list[Request] = []
         self.last_logits = jnp.zeros((slots, model_cfg.vocab), jnp.float32)
         self._uid = 0
+        self._key = jax.random.PRNGKey(seed)
+        self._host_len = np.zeros((slots,), np.int64)
+
+        self.paged = paged
+        if paged:
+            self._kv = kv
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            max_pages = -(-max_len // page_size)
+            if num_pages is None:
+                # Same budget as the dense cache, plus the trash page.
+                num_pages = slots * max_pages + 1
+            self.allocator = kv.BlockAllocator(num_pages, page_size)
+            self.cache = model_api.init_paged_cache(
+                model_cfg, slots, num_pages, page_size, max_pages)
+        else:
+            self.allocator = None
+            self.cache = model_api.init_cache(model_cfg, slots, max_len)
 
         self._decode = jax.jit(
             lambda p, tok, cache: model_api.decode_step(
@@ -127,9 +160,18 @@ class ServingEngine:
                 p, {"tokens": toks}, model_cfg, engine, max_len=max_len))
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+        prompt = np.asarray(prompt)
+        # Both backends size their cache (arena / block-table width) for
+        # max_len tokens; writes past it would be silently dropped.
+        worst = kv.BlockAllocator.worst_case_tokens(len(prompt),
+                                                   max_new_tokens)
+        if worst > self.max_len:
+            raise ValueError(
+                f"request can occupy {worst} cache positions "
+                f"(prompt {len(prompt)}, max_new {max_new_tokens}) "
+                f"but max_len is {self.max_len}")
         self._uid += 1
-        self.queue.append(Request(self._uid, np.asarray(prompt),
-                                  max_new_tokens))
+        self.queue.append(Request(self._uid, prompt, max_new_tokens))
         return self._uid
 
     def _write_slot(self, slot: int, cache1: Cache, logits1: Array):
@@ -146,11 +188,46 @@ class ServingEngine:
     def _admit(self):
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue[0]
+                if self.paged:
+                    # Watermark admission: worst-case pages must be
+                    # reservable, else the whole FIFO waits (no skip —
+                    # later short requests must not starve the head).
+                    pages = self.allocator.admit(
+                        req.uid, len(req.prompt), req.max_new_tokens)
+                    if pages is None:
+                        if not any(r is not None for r in self.active):
+                            # Nothing holds pages, yet the head still
+                            # doesn't fit: it never will.
+                            worst = self.allocator.pages_for(
+                                self.allocator.worst_case_tokens(
+                                    len(req.prompt), req.max_new_tokens))
+                            raise ValueError(
+                                f"request {req.uid} needs {worst} pages; "
+                                f"pool has {self.allocator.num_pages - 1}")
+                        break
+                self.queue.pop(0)
                 logits1, cache1 = self._prefill(
                     self.params, jnp.asarray(req.prompt[None]))
-                self._write_slot(slot, cache1, logits1)
+                if self.paged:
+                    self.cache = self._kv.write_prompt_pages(
+                        self.cache, slot, pages, cache1.k[:, 0],
+                        cache1.v[:, 0], len(req.prompt))
+                    self.last_logits = self.last_logits.at[slot].set(
+                        logits1[0])
+                else:
+                    self._write_slot(slot, cache1, logits1)
+                self._host_len[slot] = len(req.prompt)
                 self.active[slot] = req
+
+    def _release(self, slot: int, req: Request):
+        req.done = True
+        self.finished.append(req)
+        self.active[slot] = None    # slot released; queue refills next step
+        if self.paged:
+            self.allocator.release(req.uid)
+            self.cache = self._kv.clear_slot(self.cache, slot)
+            self._host_len[slot] = 0
 
     def step(self) -> int:
         """One decode step across all occupied slots; returns #active."""
@@ -158,7 +235,8 @@ class ServingEngine:
         occupied = [i for i, r in enumerate(self.active) if r is not None]
         if not occupied:
             return 0
-        toks = sample(self.last_logits, jax.random.PRNGKey(0),
+        self._key, step_key = jax.random.split(self._key)
+        toks = sample(self.last_logits, step_key,
                       temperature=self.gen.temperature, top_k=self.gen.top_k)
         mask = np.zeros((self.slots,), bool)
         host_toks = np.asarray(toks)
@@ -168,19 +246,38 @@ class ServingEngine:
             if (len(req.generated) >= req.max_new_tokens
                     or (self.gen.stop_on_eos
                         and host_toks[i] == self.gen.eos_id)):
-                req.done = True
-                self.active[i] = None   # slot released; queue refills next step
+                self._release(i, req)
             else:
                 mask[i] = True
+        if self.paged:
+            # Decode-step boundary: map a fresh page wherever the next
+            # write position falls off the end of a slot's mapped pages.
+            # Reservations make this infallible for admitted requests.
+            for i in range(self.slots):
+                req = self.active[i]
+                if req is None:
+                    continue
+                if self.allocator.needs_extend(req.uid, int(self._host_len[i])):
+                    page = self.allocator.extend(req.uid)
+                    n_mapped = len(self.allocator.pages_of(req.uid))
+                    self.cache = self._kv.PagedCache(
+                        lengths=self.cache.lengths,
+                        block_tables=self.cache.block_tables.at[
+                            i, n_mapped - 1].set(page),
+                        k_pages=self.cache.k_pages,
+                        v_pages=self.cache.v_pages,
+                    )
         self.last_logits, self.cache = self._decode(
             self.params, toks, self.cache)
+        self._host_len += 1
         return int(mask.sum()) + len(self.queue)
 
     def run(self, max_steps: int = 10000) -> list[Request]:
-        finished: list[Request] = []
-        before = {r.uid: r for r in self.queue}
+        """Drive steps until drained; returns requests finished during
+        this call (admitted-but-unfinished work is never dropped)."""
+        start = len(self.finished)
         for _ in range(max_steps):
             n = self.step()
             if n == 0 and not self.queue and all(a is None for a in self.active):
                 break
-        return [r for r in before.values() if r.done]
+        return self.finished[start:]

@@ -1,0 +1,227 @@
+"""Paged KV cache: block-granular cache memory for continuous batching.
+
+SAL-PIM appends K/V bank-sequentially — generation writes land in the
+next free bank-row rather than a pre-reserved per-sequence arena. The
+software analogue is a *paged* cache: a shared pool of fixed-size KV
+pages plus a per-sequence block table, so a slot only holds the pages
+its sequence actually filled. Mixed prompt/output lengths then share
+one pool instead of each reserving `max_len` slots.
+
+Two halves:
+
+  * `BlockAllocator` — host-side free-list over physical page ids with
+    watermark admission: a request is admitted only if its *worst-case*
+    page count (see `worst_case_tokens`) can be reserved, so decode
+    can never run out of pages mid-sequence (preemption-free). Pages
+    are physically allocated lazily — prompt pages at admit, one page
+    per decode-step boundary after that — from the reservation.
+  * `PagedCache` — the device pytree: page pools (L, P, Hkv, page, Dh),
+    per-slot block tables, per-slot lengths. Physical page 0 is a trash
+    page that is never allocated; unmapped table entries point at it so
+    writes from empty slots land harmlessly.
+
+The Pallas kernel that reads this layout through a scalar-prefetched
+block table is `kernels/paged_attention.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+TRASH_PAGE = 0  # physical page 0: scribble target for unmapped writes
+
+
+@dataclasses.dataclass
+class PagedCache:
+    """Decode-time paged KV state (dense/moe attention families).
+
+    lengths:      (B,) int32           valid tokens per slot
+    block_tables: (B, max_pages) int32 physical page per logical page
+    k_pages:      (L, P, Hkv, page_size, Dh) shared K pool
+    v_pages:      (L, P, Hkv, page_size, Dh) shared V pool
+    """
+
+    lengths: Array
+    block_tables: Array
+    k_pages: Array
+    v_pages: Array
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[3]
+
+
+jax.tree_util.register_pytree_node(
+    PagedCache,
+    lambda c: ((c.lengths, c.block_tables, c.k_pages, c.v_pages), None),
+    lambda _, ch: PagedCache(*ch),
+)
+
+
+def init_paged_cache(cfg, batch: int, num_pages: int, page_size: int,
+                     max_pages: int, dtype=None) -> PagedCache:
+    """Empty pool + all-trash block tables for `batch` decode slots."""
+    dtype = dtype or cfg.cdtype
+    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    shape = (L, num_pages, Hkv, page_size, Dh)
+    return PagedCache(
+        lengths=jnp.zeros((batch,), jnp.int32),
+        block_tables=jnp.full((batch, max_pages), TRASH_PAGE, jnp.int32),
+        k_pages=jnp.zeros(shape, dtype),
+        v_pages=jnp.zeros(shape, dtype),
+    )
+
+
+def append_kv_pages(k_pages: Array, v_pages: Array, block_tables: Array,
+                    lengths: Array, k_new: Array, v_new: Array
+                    ) -> tuple[Array, Array]:
+    """Append one token's K/V at each slot's current length (traced).
+
+    k_pages/v_pages: (P, Hkv, page, Dh) one layer's pool;
+    k_new/v_new: (B, Hkv, Dh). Slots whose logical page is unmapped hit
+    the trash page (block tables default to 0 there).
+    """
+    page = k_pages.shape[2]
+    logical = lengths // page
+    phys = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
+    off = lengths % page
+    k_pages = k_pages.at[phys, :, off].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, :, off].set(v_new.astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+def write_prompt_pages(cache: PagedCache, slot: int, page_ids: list[int],
+                       k_dense: Array, v_dense: Array, length: int
+                       ) -> PagedCache:
+    """Scatter a slot's prefill KV (L, Hkv, S, Dh) into its pages.
+
+    `page_ids` are the physical pages the allocator handed this slot;
+    they must cover ceil(length / page_size) logical pages.
+    """
+    L, Hkv, S, Dh = k_dense.shape
+    bs = cache.page_size
+    n0 = len(page_ids)
+    assert n0 * bs >= length, (n0, bs, length)
+    pad = n0 * bs - S
+    if pad > 0:
+        spec = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k_dense = jnp.pad(k_dense, spec)
+        v_dense = jnp.pad(v_dense, spec)
+    else:
+        k_dense = k_dense[:, :, :n0 * bs]
+        v_dense = v_dense[:, :, :n0 * bs]
+    # (L, Hkv, n0, bs, Dh) -> (L, n0, Hkv, bs, Dh): pool page layout.
+    ck = jnp.moveaxis(k_dense.reshape(L, Hkv, n0, bs, Dh), 2, 1)
+    cv = jnp.moveaxis(v_dense.reshape(L, Hkv, n0, bs, Dh), 2, 1)
+    ids = jnp.asarray(page_ids, jnp.int32)
+    table_row = jnp.full((cache.block_tables.shape[1],), TRASH_PAGE,
+                         jnp.int32).at[:n0].set(ids)
+    return PagedCache(
+        lengths=cache.lengths.at[slot].set(length),
+        block_tables=cache.block_tables.at[slot].set(table_row),
+        k_pages=cache.k_pages.at[:, ids].set(ck.astype(cache.k_pages.dtype)),
+        v_pages=cache.v_pages.at[:, ids].set(cv.astype(cache.v_pages.dtype)),
+    )
+
+
+def clear_slot(cache: PagedCache, slot: int) -> PagedCache:
+    """Point a released slot back at the trash page."""
+    return PagedCache(
+        lengths=cache.lengths.at[slot].set(0),
+        block_tables=cache.block_tables.at[slot].set(TRASH_PAGE),
+        k_pages=cache.k_pages,
+        v_pages=cache.v_pages,
+    )
+
+
+class BlockAllocator:
+    """Free-list page allocator with watermark (reserve-ahead) admission.
+
+    Physical page 0 is never handed out (trash page). `admit` reserves a
+    sequence's worst-case page count up front and allocates only the
+    prompt's pages; `extend` draws one page from the reservation at a
+    decode-step boundary; `release` returns everything. Because
+    admission is gated on `free - reserved`, an admitted sequence can
+    always extend — no preemption, no mid-decode OOM.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 2, "need at least trash + 1 usable page"
+        assert page_size >= 1
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free = list(range(num_pages - 1, TRASH_PAGE, -1))
+        self._reserved = 0
+        self._pages: dict[int, list[int]] = {}
+        self._quota: dict[int, int] = {}
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def available_pages(self) -> int:
+        """Pages not yet promised to any admitted sequence."""
+        return len(self._free) - self._reserved
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def pages_for(self, tokens: int) -> int:
+        return -(-max(tokens, 1) // self.page_size)
+
+    @staticmethod
+    def worst_case_tokens(prompt_tokens: int, max_new_tokens: int) -> int:
+        """Cache positions a request can ever occupy: the prompt plus one
+        KV append per generated token except the last — the slot is
+        released at the sampling step, before that token's decode."""
+        return prompt_tokens + max(max_new_tokens, 1) - 1
+
+    def pages_of(self, uid: int) -> list[int]:
+        return list(self._pages[uid])
+
+    # -- lifecycle ----------------------------------------------------------
+    def can_admit(self, prompt_tokens: int, max_new_tokens: int) -> bool:
+        worst = self.pages_for(
+            self.worst_case_tokens(prompt_tokens, max_new_tokens))
+        return self.available_pages >= worst
+
+    def admit(self, uid: int, prompt_tokens: int,
+              max_new_tokens: int) -> Optional[list[int]]:
+        """Reserve worst case, allocate prompt pages. None if over watermark."""
+        assert uid not in self._pages, f"uid {uid} already admitted"
+        worst = self.pages_for(
+            self.worst_case_tokens(prompt_tokens, max_new_tokens))
+        if self.available_pages < worst:
+            return None
+        n0 = self.pages_for(prompt_tokens)
+        pages = [self._free.pop() for _ in range(n0)]
+        self._pages[uid] = pages
+        self._quota[uid] = worst
+        self._reserved += worst - n0
+        return list(pages)
+
+    def needs_extend(self, uid: int, next_token_pos: int) -> bool:
+        """True when the write at `next_token_pos` falls off mapped pages."""
+        return self.pages_for(next_token_pos + 1) > len(self._pages[uid])
+
+    def extend(self, uid: int) -> int:
+        """One more page from uid's reservation (decode-step boundary)."""
+        pages = self._pages[uid]
+        assert len(pages) < self._quota[uid], "reservation exhausted"
+        self._reserved -= 1
+        page = self._free.pop()
+        pages.append(page)
+        return page
+
+    def release(self, uid: int) -> None:
+        pages = self._pages.pop(uid)
+        self._reserved -= self._quota.pop(uid) - len(pages)
+        self._free.extend(pages)

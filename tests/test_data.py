@@ -1,9 +1,9 @@
 """Data pipeline: determinism, seekability, shard partition property."""
 from __future__ import annotations
 
-import hypothesis as hyp
-import hypothesis.strategies as st
 import numpy as np
+
+from hypcompat import hyp, st
 
 from repro.data import tokens as D
 

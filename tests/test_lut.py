@@ -2,13 +2,12 @@
 claim (>=32 sections keeps accuracy), range reduction, onehot==gather."""
 from __future__ import annotations
 
-import hypothesis as hyp
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from hypcompat import hyp, st
 from repro.core import lut as L
 
 

@@ -2,13 +2,12 @@
 semantics, int8 per-row path, and the paper's 16-bit accuracy claim proxy."""
 from __future__ import annotations
 
-import hypothesis as hyp
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from hypcompat import hyp, st
 from repro.core import quant as Q
 
 
