@@ -1,17 +1,25 @@
 #!/usr/bin/env python
-"""Dense-slot vs paged continuous batching at mixed sequence lengths.
+"""Dense-slot vs paged continuous batching, and prefix sharing on top.
 
-The dense `ServingEngine` gives every decode slot a `max_len` KV arena,
-so a workload with mixed prompt/output lengths pins worst-case memory
-per slot. The paged engine shares one page pool: short requests release
-their pages the moment they finish, so the same KV memory budget admits
-more concurrent work.
+Part 1 — mixed lengths: the dense `ServingEngine` gives every decode
+slot a `max_len` KV arena, so a workload with mixed prompt/output
+lengths pins worst-case memory per slot. The paged engine shares one
+page pool: short requests release their pages the moment they finish,
+so the same KV memory budget admits more concurrent work.
 
-Reports, for each engine: decode steps to drain, wall time, generated
-tokens/sec, and KV bytes provisioned.
+Part 2 — shared prefixes: requests that repeat a system-prompt-style
+prefix are served twice on the paged engine, with prefix sharing off
+and on. Sharing maps the cached prefix pages into each new slot and
+prefills only the suffix, so it must show fewer prefill tokens and a
+lower page high-water mark — with bit-identical greedy outputs.
+
+Reports, per engine: decode steps to drain, wall time (first step
+excluded as compile warmup), generated tokens/sec, KV bytes
+provisioned, prefill tokens, and peak pages.
 
     PYTHONPATH=src python benchmarks/paged_serving.py
     PYTHONPATH=src python benchmarks/paged_serving.py --requests 16 --slots 4
+    PYTHONPATH=src python benchmarks/paged_serving.py --requests 4 --smoke
 """
 from __future__ import annotations
 
@@ -45,21 +53,49 @@ def _mixed_workload(rng, vocab, n, max_len):
     return reqs
 
 
-def _drain(eng, reqs):
+def _shared_prefix_workload(rng, vocab, n, max_len, prefix_len):
+    """System-prompt style: every request starts with the same prefix
+    (few-shot template / system prompt) followed by a short unique tail."""
+    prefix = rng.randint(2, vocab, size=prefix_len)
+    reqs = []
+    for _ in range(n):
+        tail = rng.randint(2, vocab, size=rng.randint(1, 5))
+        prompt = np.concatenate([prefix, tail])
+        budget = max_len - len(prompt) + 1
+        new = int(max(1, min(rng.randint(4, 10), budget)))
+        reqs.append((prompt, new))
+    return reqs
+
+
+def _drain(eng, reqs, max_steps=10_000):
     for prompt, new in reqs:
         eng.submit(prompt, max_new_tokens=new)
+
+    def drained():
+        return not eng.queue and all(a is None for a in eng.active)
+
+    def tok_count():
+        return (sum(len(r.generated) for r in eng.finished)
+                + sum(len(r.generated) for r in eng.active
+                      if r is not None))
+
+    eng.step()       # warmup: first step pays prefill/decode compile
+    warm_toks = tok_count()
+    steps = 0        # timed steps; the warmup step is in neither rate
     t0 = time.perf_counter()
-    steps = 0
-    while True:
-        n = eng.step()
+    while not drained():
+        if steps >= max_steps:
+            raise RuntimeError(
+                f"engine not drained after {max_steps} steps "
+                f"(queue={len(eng.queue)}, "
+                f"active={sum(a is not None for a in eng.active)})")
+        eng.step()
         steps += 1
-        if n == 0 and not eng.queue and all(a is None for a in eng.active):
-            break
     dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in eng.finished)
     assert len(eng.finished) == len(reqs), (len(eng.finished), len(reqs))
     return {"steps": steps, "sec": dt, "tokens": toks,
-            "tok_per_sec": toks / max(dt, 1e-9)}
+            "tok_per_sec": (toks - warm_toks) / max(dt, 1e-9)}
 
 
 def _kv_bytes(cfg, eng):
@@ -70,15 +106,25 @@ def _kv_bytes(cfg, eng):
     return 2 * k.size * k.dtype.itemsize
 
 
+def _report(mode, eng, stats):
+    print(f"{mode:>14}: {stats['steps']} steps, {stats['sec']:.2f}s, "
+          f"{stats['tokens']} tokens, {stats['tok_per_sec']:.1f} tok/s, "
+          f"KV {stats['kv_bytes'] / 1e6:.2f} MB, "
+          f"prefill {eng.prefill_tokens} tok "
+          f"(saved {eng.prefill_tokens_saved}), "
+          f"peak pages {eng.peak_pages}")
+
+
 def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
-        page_size=16, seed=0):
+        page_size=16, seed=0, max_steps=10_000):
     cfg = get_config(arch, smoke=True)
     engine = SalPimEngine.create(SalPimConfig())
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.RandomState(seed)
-    reqs = _mixed_workload(rng, cfg.vocab, requests, max_len)
     gen = GenConfig(temperature=0.0, stop_on_eos=False)
 
+    # -- part 1: dense vs paged on mixed lengths ----------------------------
+    reqs = _mixed_workload(rng, cfg.vocab, requests, max_len)
     rows = []
     for mode, kwargs in [
         ("dense", {}),
@@ -86,18 +132,48 @@ def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
     ]:
         eng = ServingEngine(params, cfg, engine, slots=slots,
                             max_len=max_len, gen=gen, **kwargs)
-        stats = _drain(eng, [(p.copy(), n) for p, n in reqs])
+        stats = _drain(eng, [(p.copy(), n) for p, n in reqs],
+                       max_steps=max_steps)
         stats["kv_bytes"] = _kv_bytes(cfg, eng)
         rows.append((mode, stats))
-        print(f"{mode:>6}: {stats['steps']} steps, {stats['sec']:.2f}s, "
-              f"{stats['tokens']} tokens, {stats['tok_per_sec']:.1f} tok/s, "
-              f"KV {stats['kv_bytes'] / 1e6:.2f} MB")
+        _report(mode, eng, stats)
 
     dense, paged = rows[0][1], rows[1][1]
     assert dense["tokens"] == paged["tokens"], (dense["tokens"],
                                                 paged["tokens"])
     print(f"paged/dense wall-clock ratio: {paged['sec'] / dense['sec']:.2f}x "
           f"(same {dense['tokens']} tokens)")
+
+    # -- part 2: prefix sharing on a shared-prefix workload -----------------
+    prefix_len = max(page_size, (max_len // 2 // page_size) * page_size)
+    shared_reqs = _shared_prefix_workload(rng, cfg.vocab, requests, max_len,
+                                          prefix_len)
+    outs = {}
+    for mode, sharing in [("paged-noshare", False), ("paged-share", True)]:
+        eng = ServingEngine(params, cfg, engine, slots=slots,
+                            max_len=max_len, gen=gen, paged=True,
+                            page_size=page_size, prefix_sharing=sharing)
+        stats = _drain(eng, [(p.copy(), n) for p, n in shared_reqs],
+                       max_steps=max_steps)
+        stats["kv_bytes"] = _kv_bytes(cfg, eng)
+        stats["prefill_tokens"] = eng.prefill_tokens
+        stats["peak_pages"] = eng.peak_pages
+        outs[mode] = {r.uid: list(r.generated) for r in eng.finished}
+        rows.append((mode, stats))
+        _report(mode, eng, stats)
+
+    base, share = rows[2][1], rows[3][1]
+    assert outs["paged-share"] == outs["paged-noshare"], \
+        "prefix sharing changed greedy outputs"
+    assert share["prefill_tokens"] < base["prefill_tokens"], \
+        (share["prefill_tokens"], base["prefill_tokens"])
+    assert share["peak_pages"] < base["peak_pages"], \
+        (share["peak_pages"], base["peak_pages"])
+    saved = base["prefill_tokens"] - share["prefill_tokens"]
+    print(f"prefix sharing: {saved} prefill tokens saved "
+          f"({saved / base['prefill_tokens']:.0%}), peak pages "
+          f"{base['peak_pages']} -> {share['peak_pages']}, "
+          f"outputs bit-identical")
     return rows
 
 
@@ -109,9 +185,22 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-steps", type=int, default=10_000,
+                    help="hard cap on decode steps per drain (an engine "
+                         "regression raises instead of hanging)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast configuration for CI: few requests, "
+                         "short sequences, small pages")
     args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 4)
+        args.max_len = min(args.max_len, 32)
+        args.page_size = min(args.page_size, 8)
+        args.slots = min(args.slots, 2)
+        args.max_steps = min(args.max_steps, 2_000)
     run(arch=args.arch, slots=args.slots, max_len=args.max_len,
-        requests=args.requests, page_size=args.page_size, seed=args.seed)
+        requests=args.requests, page_size=args.page_size, seed=args.seed,
+        max_steps=args.max_steps)
 
 
 if __name__ == "__main__":

@@ -26,6 +26,12 @@ def main():
                     help="tokens per KV page (paged mode)")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="page pool size (paged mode; default: dense-equal)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable copy-on-write prompt prefix sharing "
+                         "(paged mode; shared by default)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common prefix of this many tokens to "
+                         "every prompt (exercises prefix sharing)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=10)
@@ -39,11 +45,14 @@ def main():
                         max_len=args.max_len,
                         gen=GenConfig(temperature=0.0, stop_on_eos=False),
                         paged=args.paged, page_size=args.page_size,
-                        num_pages=args.num_pages)
+                        num_pages=args.num_pages,
+                        prefix_sharing=not args.no_prefix_sharing)
     rng = np.random.RandomState(0)
+    shared = rng.randint(2, cfg.vocab, size=args.shared_prefix)
     uids = []
     for i in range(args.requests):
         prompt = rng.randint(2, cfg.vocab, size=rng.randint(4, 12))
+        prompt = np.concatenate([shared, prompt])
         uids.append(eng.submit(prompt, max_new_tokens=int(rng.randint(5, 15))))
     mode = (f"paged (page_size={args.page_size}, "
             f"{eng.allocator.num_pages} pages)" if args.paged else "dense")
@@ -65,7 +74,10 @@ def main():
     if args.paged:
         a = eng.allocator
         print(f"page pool: {a.used_pages} in use / {a.num_pages - 1} usable "
-              f"(all should be free after drain: {a.free_pages})")
+              f"(all should be free after drain: {a.free_pages}), "
+              f"peak {eng.peak_pages} pages")
+        print(f"prefill: {eng.prefill_tokens} tokens computed, "
+              f"{eng.prefill_tokens_saved} skipped via shared prefix pages")
 
 
 if __name__ == "__main__":

@@ -95,6 +95,17 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig, engine: SalPimEngine,
     return tf.prefill(params, batch["tokens"], cfg, engine, max_len=max_len)
 
 
+def prefill_suffix(params: dict, tokens: Array, prefix_k: Array,
+                   prefix_v: Array, cfg: ModelConfig, engine: SalPimEngine):
+    """Prefill a suffix over resident prefix KV (prefix sharing; dense/moe
+    only). tokens (B, S) continue sequences whose first P positions' KV
+    is prefix_k/v (L, B, Hkv, P, Dh); positions are offset by P. Returns
+    (last-position logits, k_suffix, v_suffix)."""
+    if cfg.family == "encdec":
+        raise ValueError("prefix sharing unsupported for encdec")
+    return tf.prefill_suffix(params, tokens, prefix_k, prefix_v, cfg, engine)
+
+
 def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,
                 engine: SalPimEngine):
     """`cache` may be a dense `Cache` or a `serving.kvcache.PagedCache`;

@@ -148,6 +148,48 @@ def attention_fullseq(
     return out
 
 
+def attention_prefill_suffix(
+    p: dict,
+    x: Array,                      # (B, S, D) suffix hidden states
+    prefix_k: Array,               # (B, Hkv, P, Dh) resident prefix KV
+    prefix_v: Array,
+    cfg: ModelConfig,
+    engine: SalPimEngine,
+    *,
+    cos: Array | None,             # rope at positions P .. P+S-1
+    sin: Array | None,
+    window,
+    q_offset: int,
+):
+    """Prefill a suffix whose first `q_offset` positions already have KV.
+
+    The suffix queries attend over the shared prefix KV plus their own
+    fresh KV; the causal/window mask is applied at absolute positions
+    (`q_offset` shifts the query rows). Returns (out, (k, v)) with the
+    suffix K/V in cache layout (B, Hkv, S, Dh) — the prefix KV is
+    resident (shared pages) and is never rewritten.
+    """
+    B, S, D = x.shape
+    q, k, v = _project_qkv(p, x, cfg, engine)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    v = constrain(v, "batch", None, "model", None)
+    # Prefix KV to seq-major (B, P, Hkv, Dh) and bank-sequential concat.
+    pk = jnp.moveaxis(prefix_k, 1, 2).astype(k.dtype)
+    pv = jnp.moveaxis(prefix_v, 1, 2).astype(v.dtype)
+    k_all = jnp.concatenate([pk, k], axis=1)
+    v_all = jnp.concatenate([pv, v], axis=1)
+    out = _masked_softmax_attn(q, k_all, v_all, engine, cfg,
+                               q_offset=q_offset, causal=cfg.causal,
+                               window=window)
+    out = engine.linear(out.reshape(B, S, -1), p["wo"])
+    out = constrain(out, "batch", None, None)
+    return out, (jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2))
+
+
 def _quantize_vec(x: Array) -> tuple[Array, Array]:
     """(..., D) -> int8 + (...) scale (per-vector symmetric)."""
     absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)

@@ -74,15 +74,11 @@ def apply_decoder_block(
     return x + h
 
 
-def apply_decoder_block_prefill(
-    p: dict, x: Array, cfg: ModelConfig, engine: SalPimEngine, *,
-    cos, sin, window,
-):
-    """Like apply_decoder_block but also returns (k, v) for the cache."""
+def _prefill_block_skeleton(p, x, cfg, engine, attn_fn):
+    """Shared prefill block: norm/attn/residual/ffn around `attn_fn`,
+    which maps the normed hidden to (attn_out, (k, v)) for the cache."""
     h = apply_norm(p["ln1"], x, cfg, engine)
-    h, (ck, cv) = attn_lib.attention_fullseq(
-        p["attn"], h, cfg, engine, cos=cos, sin=sin, window=window,
-        causal=cfg.causal, return_kv=True)
+    h, (ck, cv) = attn_fn(h)
     if cfg.post_norms:
         h = apply_norm(p["post_ln1"], h, cfg, engine)
     x = x + h
@@ -92,6 +88,31 @@ def apply_decoder_block_prefill(
     if cfg.post_norms:
         h = apply_norm(p["post_ln2"], h, cfg, engine)
     return x + h, (ck, cv)
+
+
+def apply_decoder_block_prefill(
+    p: dict, x: Array, cfg: ModelConfig, engine: SalPimEngine, *,
+    cos, sin, window,
+):
+    """Like apply_decoder_block but also returns (k, v) for the cache."""
+    return _prefill_block_skeleton(
+        p, x, cfg, engine,
+        lambda h: attn_lib.attention_fullseq(
+            p["attn"], h, cfg, engine, cos=cos, sin=sin, window=window,
+            causal=cfg.causal, return_kv=True))
+
+
+def apply_decoder_block_prefill_suffix(
+    p: dict, x: Array, prefix_k: Array, prefix_v: Array, cfg: ModelConfig,
+    engine: SalPimEngine, *, cos, sin, window, q_offset: int,
+):
+    """Prefill block over a suffix with resident prefix KV (prefix
+    sharing). Returns (x', (k_suffix, v_suffix))."""
+    return _prefill_block_skeleton(
+        p, x, cfg, engine,
+        lambda h: attn_lib.attention_prefill_suffix(
+            p["attn"], h, prefix_k, prefix_v, cfg, engine, cos=cos,
+            sin=sin, window=window, q_offset=q_offset))
 
 
 def _decode_block_skeleton(p, x, cfg, engine, attn_fn):

@@ -385,9 +385,54 @@ def _hybrid_prefill(params, x, cfg, engine, cos, sin, lengths, max_len):
     return x, cache
 
 
+def prefill_suffix(params: dict, tokens: Array, prefix_k: Array,
+                   prefix_v: Array, cfg: ModelConfig, engine: SalPimEngine
+                   ) -> tuple[Array, Array, Array]:
+    """Prefill only a suffix: the first `P` positions' KV is already
+    resident (shared prefix pages; prefix_k/v: (L, B, Hkv, P, Dh)).
+
+    Suffix positions start at P — RoPE / learned positions are offset —
+    and suffix queries attend over the prefix KV. Returns
+    (last-position logits (B, V), k_suffix, v_suffix) with the suffix
+    K/V stacked (L, B, Hkv, S, Dh) for scattering into fresh pages.
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"prefix sharing unsupported for family "
+                         f"{cfg.family!r}")
+    if cfg.kv_dtype == "int8":
+        raise ValueError("prefix sharing does not support int8 KV yet")
+    B, S = tokens.shape
+    P = prefix_k.shape[3]
+    pos = jnp.arange(S) + P
+    x = _embed(params, tokens, cfg,
+               positions=pos if cfg.learned_pos_emb else None)
+    cos, sin = _rope(cfg, pos)
+
+    def body(h, layer):
+        bp, window, pk, pv = layer
+        h, (ck, cv) = blk.apply_decoder_block_prefill_suffix(
+            bp, h, pk, pv, cfg, engine, cos=cos, sin=sin, window=window,
+            q_offset=P)
+        return h, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(_maybe_remat(body, cfg), x,
+                               (params["blocks"], _windows(cfg),
+                                prefix_k, prefix_v))
+    logits = _logits(params, x[:, -1], cfg, engine)
+    return logits, ks.astype(cfg.cdtype), vs.astype(cfg.cdtype)
+
+
 # ---------------------------------------------------------------------------
 # Decode: one token per call (the paper's generation-stage workload)
 # ---------------------------------------------------------------------------
+
+
+def _advance_lengths(lengths: Array) -> Array:
+    """Advance only live sequences. Released serving slots park at
+    length 0; unconditionally adding 1 every step made idle lengths
+    creep without bound — attention then spans ever more garbage (trash
+    pages on the paged backend) and KV appends scatter junk each step."""
+    return lengths + (lengths > 0).astype(lengths.dtype)
 
 def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,
                 engine: SalPimEngine):
@@ -415,7 +460,7 @@ def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,
             x, (nk, nv, nks, nvs) = jax.lax.scan(
                 body8, x, (params["blocks"], _windows(cfg), cache.k,
                            cache.v, cache.k_scale, cache.v_scale))
-            new_cache = Cache(lengths=cache.lengths + 1, k=nk, v=nv,
+            new_cache = Cache(lengths=_advance_lengths(cache.lengths), k=nk, v=nv,
                               k_scale=nks, v_scale=nvs)
         else:
             def body(h, layer):
@@ -427,7 +472,7 @@ def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,
 
             x, (nk, nv) = jax.lax.scan(
                 body, x, (params["blocks"], _windows(cfg), cache.k, cache.v))
-            new_cache = Cache(lengths=cache.lengths + 1, k=nk, v=nv)
+            new_cache = Cache(lengths=_advance_lengths(cache.lengths), k=nk, v=nv)
     elif cfg.family == "ssm":
         def body(h, layer):
             bp, st, cv = layer
@@ -437,7 +482,7 @@ def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,
 
         x, (nst, ncv) = jax.lax.scan(body, x, (params["blocks"], cache.ssm,
                                                cache.conv))
-        new_cache = Cache(lengths=cache.lengths + 1, ssm=nst, conv=ncv)
+        new_cache = Cache(lengths=_advance_lengths(cache.lengths), ssm=nst, conv=ncv)
     elif cfg.family == "hybrid":
         x, new_cache = _hybrid_decode(params, x, cache, cfg, engine, cos, sin)
     else:
@@ -472,7 +517,7 @@ def _decode_step_paged(params: dict, token: Array, cache, cfg: ModelConfig,
     x, (nk, nv) = jax.lax.scan(
         body, x, (params["blocks"], _windows(cfg), cache.k_pages,
                   cache.v_pages))
-    new_cache = PagedCache(lengths=cache.lengths + 1,
+    new_cache = PagedCache(lengths=_advance_lengths(cache.lengths),
                            block_tables=cache.block_tables,
                            k_pages=nk, v_pages=nv)
     return _logits(params, x, cfg, engine), new_cache
@@ -507,7 +552,7 @@ def _hybrid_decode(params, x, cache: Cache, cfg, engine, cos, sin):
         nst_all.append(nst)
         ncv_all.append(ncv)
     new_cache = Cache(
-        lengths=cache.lengths + 1,
+        lengths=_advance_lengths(cache.lengths),
         ssm=jnp.concatenate(nst_all, 0),
         conv=jnp.concatenate(ncv_all, 0),
         shared_k=jnp.stack(nk, 0),

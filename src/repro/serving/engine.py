@@ -83,11 +83,24 @@ def generate(params: dict, prompts: Array, model_cfg: ModelConfig,
     jax.block_until_ready(toks)
     t_decode = time.perf_counter() - t0
 
+    # Honest token accounting: a sequence that hits EOS at step k emitted
+    # k+1 real tokens; the scan still pads to max_new_tokens with EOS,
+    # but those padding positions are not generated work.
+    toks_host = np.asarray(toks)
+    if gen.stop_on_eos:
+        is_eos = toks_host == gen.eos_id
+        n_per_seq = np.where(is_eos.any(axis=1),
+                             is_eos.argmax(axis=1) + 1,
+                             toks_host.shape[1])
+    else:
+        n_per_seq = np.full((B,), gen.max_new_tokens)
+    n_tokens = int(n_per_seq.sum())
     stats = {
         "prefill_sec": t_prefill,
         "decode_sec": t_decode,
-        "sec_per_token": t_decode / max(gen.max_new_tokens, 1),
-        "tokens": int(B * gen.max_new_tokens),
+        "sec_per_token": t_decode * B / max(n_tokens, 1),
+        "tokens": n_tokens,
+        "tokens_budget": int(B * gen.max_new_tokens),
     }
     return toks, stats
 
@@ -114,13 +127,22 @@ class ServingEngine:
         physically allocated at decode-step boundaries and freed the
         moment a request completes — mixed prompt/output lengths no
         longer each pin a full `max_len` arena.
+
+    Paged mode additionally shares prompt prefixes (`prefix_sharing`,
+    on by default): admission walks the allocator's content-addressed
+    prefix cache, maps the longest cached run of full pages into the new
+    slot, and prefills only the remaining suffix (positions offset by
+    the shared length). Shared pages are copy-on-write: a KV write that
+    would land in a page with refcount > 1 first forks it into a private
+    physical page. Greedy outputs are bit-identical with sharing on or
+    off — sharing only removes redundant prefill work and pool pressure.
     """
 
     def __init__(self, params: dict, model_cfg: ModelConfig,
                  engine: SalPimEngine, *, slots: int, max_len: int,
                  gen: GenConfig = GenConfig(), paged: bool = False,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 seed: int = 0):
+                 prefix_sharing: bool = True, seed: int = 0):
         self.params = params
         self.cfg = model_cfg
         self.engine = engine
@@ -134,6 +156,11 @@ class ServingEngine:
         self._uid = 0
         self._key = jax.random.PRNGKey(seed)
         self._host_len = np.zeros((slots,), np.int64)
+        # Serving stats: tokens actually prefilled vs skipped via shared
+        # prefix pages, and the page pool's high-water mark.
+        self.prefill_tokens = 0
+        self.prefill_tokens_saved = 0
+        self.peak_pages = 0
 
         self.paged = paged
         if paged:
@@ -144,7 +171,8 @@ class ServingEngine:
             if num_pages is None:
                 # Same budget as the dense cache, plus the trash page.
                 num_pages = slots * max_pages + 1
-            self.allocator = kv.BlockAllocator(num_pages, page_size)
+            self.allocator = kv.BlockAllocator(
+                num_pages, page_size, prefix_sharing=prefix_sharing)
             self.cache = model_api.init_paged_cache(
                 model_cfg, slots, num_pages, page_size, max_pages)
         else:
@@ -158,6 +186,10 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, toks: model_api.prefill(
                 p, {"tokens": toks}, model_cfg, engine, max_len=max_len))
+        # Suffix-only prefill over a shared prefix (prefix sharing).
+        self._prefill_suffix = jax.jit(
+            lambda p, toks, pk, pv: model_api.prefill_suffix(
+                p, toks, pk, pv, model_cfg, engine))
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
         prompt = np.asarray(prompt)
@@ -185,17 +217,50 @@ class ServingEngine:
                                   is_leaf=lambda x: x is None)
         self.last_logits = self.last_logits.at[slot].set(logits1[0])
 
+    def _admit_paged(self, slot: int, req: Request,
+                     pages: list[int], shared_tokens: int):
+        """Fill a slot from prompt pages, prefilling only the unshared
+        suffix. When the prefix cache covers the whole prompt the last
+        token is recomputed (its logits feed sampling) and its KV write
+        COW-forks the final shared page first."""
+        prompt_len = len(req.prompt)
+        suffix_start = min(shared_tokens, prompt_len - 1)
+        if suffix_start < shared_tokens:
+            logical = suffix_start // self.allocator.page_size
+            old, new = self.allocator.fork_page(req.uid, logical)
+            self.cache = self._kv.copy_page(self.cache, old, new)
+            pages[logical] = new
+        if suffix_start > 0:
+            pk, pv = self._kv.gather_prefix_kv(self.cache, pages,
+                                               suffix_start)
+            logits1, k_suf, v_suf = self._prefill_suffix(
+                self.params, jnp.asarray(req.prompt[suffix_start:])[None],
+                pk[:, None], pv[:, None])
+            self.cache = self._kv.write_suffix_pages(
+                self.cache, slot, pages, k_suf[:, 0], v_suf[:, 0],
+                suffix_start, prompt_len)
+        else:
+            logits1, cache1 = self._prefill(
+                self.params, jnp.asarray(req.prompt[None]))
+            self.cache = self._kv.write_prompt_pages(
+                self.cache, slot, pages, cache1.k[:, 0], cache1.v[:, 0],
+                prompt_len)
+        self.last_logits = self.last_logits.at[slot].set(logits1[0])
+        self.prefill_tokens += prompt_len - suffix_start
+        self.prefill_tokens_saved += suffix_start
+
     def _admit(self):
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
                 req = self.queue[0]
                 if self.paged:
-                    # Watermark admission: worst-case pages must be
-                    # reservable, else the whole FIFO waits (no skip —
-                    # later short requests must not starve the head).
-                    pages = self.allocator.admit(
-                        req.uid, len(req.prompt), req.max_new_tokens)
-                    if pages is None:
+                    # Watermark admission: worst-case pages (net of any
+                    # shared prefix pages) must be reservable, else the
+                    # whole FIFO waits (no skip — later short requests
+                    # must not starve the head).
+                    res = self.allocator.admit_tokens(
+                        req.uid, req.prompt, req.max_new_tokens)
+                    if res is None:
                         if not any(r is not None for r in self.active):
                             # Nothing holds pages, yet the head still
                             # doesn't fit: it never will.
@@ -207,18 +272,18 @@ class ServingEngine:
                                 f"pool has {self.allocator.num_pages - 1}")
                         break
                 self.queue.pop(0)
-                logits1, cache1 = self._prefill(
-                    self.params, jnp.asarray(req.prompt[None]))
                 if self.paged:
-                    self.cache = self._kv.write_prompt_pages(
-                        self.cache, slot, pages, cache1.k[:, 0],
-                        cache1.v[:, 0], len(req.prompt))
-                    self.last_logits = self.last_logits.at[slot].set(
-                        logits1[0])
+                    self._admit_paged(slot, req, *res)
                 else:
+                    logits1, cache1 = self._prefill(
+                        self.params, jnp.asarray(req.prompt[None]))
                     self._write_slot(slot, cache1, logits1)
+                    self.prefill_tokens += len(req.prompt)
                 self._host_len[slot] = len(req.prompt)
                 self.active[slot] = req
+        if self.paged:
+            self.peak_pages = max(self.peak_pages,
+                                  self.allocator.used_pages)
 
     def _release(self, slot: int, req: Request):
         req.done = True
@@ -227,7 +292,12 @@ class ServingEngine:
         if self.paged:
             self.allocator.release(req.uid)
             self.cache = self._kv.clear_slot(self.cache, slot)
-            self._host_len[slot] = 0
+        else:
+            # Park the slot at length 0 so decode_step stops advancing
+            # it (idle lengths otherwise creep and the slot burns
+            # attention/append work on garbage every step).
+            self.cache.lengths = self.cache.lengths.at[slot].set(0)
+        self._host_len[slot] = 0
 
     def step(self) -> int:
         """One decode step across all occupied slots; returns #active."""
@@ -251,26 +321,42 @@ class ServingEngine:
                 mask[i] = True
         if self.paged:
             # Decode-step boundary: map a fresh page wherever the next
-            # write position falls off the end of a slot's mapped pages.
-            # Reservations make this infallible for admitted requests.
+            # write position falls off the end of a slot's mapped pages
+            # (reservations make this infallible for admitted requests),
+            # and COW-fork any still-shared page the write would land in
+            # so the append cannot leak into other sequences.
             for i in range(self.slots):
                 req = self.active[i]
                 if req is None:
                     continue
-                if self.allocator.needs_extend(req.uid, int(self._host_len[i])):
+                pos = int(self._host_len[i])
+                if self.allocator.needs_extend(req.uid, pos):
                     page = self.allocator.extend(req.uid)
                     n_mapped = len(self.allocator.pages_of(req.uid))
-                    self.cache = self._kv.PagedCache(
-                        lengths=self.cache.lengths,
-                        block_tables=self.cache.block_tables.at[
-                            i, n_mapped - 1].set(page),
-                        k_pages=self.cache.k_pages,
-                        v_pages=self.cache.v_pages,
-                    )
+                    self._repoint(i, n_mapped - 1, page)
+                else:
+                    logical = pos // self.allocator.page_size
+                    page = self.allocator.pages_of(req.uid)[logical]
+                    if self.allocator.refcount(page) > 1:
+                        old, new = self.allocator.fork_page(req.uid, logical)
+                        self.cache = self._kv.copy_page(self.cache, old, new)
+                        self._repoint(i, logical, new)
+            self.peak_pages = max(self.peak_pages,
+                                  self.allocator.used_pages)
         self.last_logits, self.cache = self._decode(
             self.params, toks, self.cache)
-        self._host_len += 1
+        # Only live slots advance; released/empty slots stay parked at 0
+        # (decode_step freezes zero-length slots on device too).
+        self._host_len += mask
         return int(mask.sum()) + len(self.queue)
+
+    def _repoint(self, slot: int, logical: int, page: int):
+        self.cache = self._kv.PagedCache(
+            lengths=self.cache.lengths,
+            block_tables=self.cache.block_tables.at[slot, logical].set(page),
+            k_pages=self.cache.k_pages,
+            v_pages=self.cache.v_pages,
+        )
 
     def run(self, max_steps: int = 10000) -> list[Request]:
         """Drive steps until drained; returns requests finished during

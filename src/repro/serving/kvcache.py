@@ -20,16 +20,38 @@ Two halves:
     page that is never allocated; unmapped table entries point at it so
     writes from empty slots land harmlessly.
 
+Prefix sharing (refcount + copy-on-write):
+
+  Every allocated page carries a refcount. Full (page-aligned) prompt
+  pages are registered in a prefix cache keyed by a hash *chain* over
+  page-sized token chunks — chunk i's key folds in chunk i-1's key, so
+  a key identifies the entire token prefix through that page, not just
+  the chunk's own content. `admit_tokens` walks the chain and maps the
+  longest cached run of full pages into the new sequence's block table
+  (refcount += 1 per shared page); the engine then prefills only the
+  remaining suffix. Watermark admission reserves the worst case *net of
+  shared pages* (plus one page when the prompt is fully covered and the
+  recomputed last token's KV write needs a private copy).
+
+  A write that would land in a page with refcount > 1 must first fork
+  it: `fork_page` moves the owner to a fresh physical page (COW), the
+  engine copies the page contents (`copy_page`) and repoints the block
+  table, and only then is the write issued. Cache entries live exactly
+  as long as their page: when a release drops a refcount to zero the
+  page returns to the free list and its prefix-cache entry is removed.
+
 The Pallas kernel that reads this layout through a scalar-prefetched
 block table is `kernels/paged_attention.py`.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -129,6 +151,93 @@ def write_prompt_pages(cache: PagedCache, slot: int, page_ids: list[int],
     )
 
 
+def copy_page(cache: PagedCache, src: int, dst: int) -> PagedCache:
+    """COW fork: duplicate physical page `src` into `dst` on every layer."""
+    return PagedCache(
+        lengths=cache.lengths,
+        block_tables=cache.block_tables,
+        k_pages=cache.k_pages.at[:, dst].set(cache.k_pages[:, src]),
+        v_pages=cache.v_pages.at[:, dst].set(cache.v_pages[:, src]),
+    )
+
+
+def gather_prefix_kv(cache: PagedCache, page_ids: list[int],
+                     prefix_len: int) -> tuple[Array, Array]:
+    """Dense (L, Hkv, prefix_len, Dh) view of a sequence's first pages.
+
+    Used by suffix prefill: the shared prefix KV already lives in the
+    pool; suffix queries attend over this gathered view plus their own
+    fresh KV.
+    """
+    bs = cache.page_size
+    n = -(-prefix_len // bs)
+    ids = jnp.asarray(page_ids[:n], jnp.int32)
+
+    def gather(pool):
+        pages = pool[:, ids]                       # (L, n, Hkv, bs, Dh)
+        L, _, Hkv, _, Dh = pages.shape
+        dense = jnp.moveaxis(pages, 1, 2).reshape(L, Hkv, n * bs, Dh)
+        return dense[:, :, :prefix_len]
+
+    return gather(cache.k_pages), gather(cache.v_pages)
+
+
+def write_suffix_pages(cache: PagedCache, slot: int, page_ids: list[int],
+                       k_suf: Array, v_suf: Array, start: int, length: int
+                       ) -> PagedCache:
+    """Scatter suffix KV for token positions [start, length) into pages.
+
+    k_suf/v_suf: (L, Hkv, Ssuf, Dh) with Ssuf >= length - start; the
+    first `start` positions of the sequence are already resident (shared
+    prefix pages). Sets the slot's whole block-table row to `page_ids`
+    (trash beyond) and its length to `length`. The page containing
+    `start` may be written partially — the caller must have COW-forked
+    it if it was shared.
+    """
+    bs = cache.page_size
+    n0 = len(page_ids)
+    assert n0 * bs >= length, (n0, bs, length)
+    assert k_suf.shape[2] >= length - start, (k_suf.shape, start, length)
+    kp, vp = cache.k_pages, cache.v_pages
+    aligned = start
+    off = start % bs
+    if off:
+        # Partial first page (the COW-fork case): one targeted update.
+        lp = start // bs
+        b = min(length, (lp + 1) * bs)
+        phys = page_ids[lp]
+        kp = kp.at[:, phys, :, off:off + b - start].set(
+            k_suf[:, :, :b - start].astype(kp.dtype))
+        vp = vp.at[:, phys, :, off:off + b - start].set(
+            v_suf[:, :, :b - start].astype(vp.dtype))
+        aligned = b
+    if aligned < length:
+        # Page-aligned remainder: one combined scatter, like
+        # write_prompt_pages (no per-page pool copies).
+        lp0, lp1 = aligned // bs, -(-length // bs)
+        n = lp1 - lp0
+        L, Hkv, _, Dh = k_suf.shape
+        s0 = aligned - start                       # offset within suffix
+        pad = n * bs - (length - aligned)
+        spec = ((0, 0), (0, 0), (0, pad), (0, 0))
+        ck = jnp.pad(k_suf[:, :, s0:s0 + length - aligned], spec)
+        cv = jnp.pad(v_suf[:, :, s0:s0 + length - aligned], spec)
+        ck = jnp.moveaxis(ck.reshape(L, Hkv, n, bs, Dh), 2, 1)
+        cv = jnp.moveaxis(cv.reshape(L, Hkv, n, bs, Dh), 2, 1)
+        pids = jnp.asarray(page_ids[lp0:lp1], jnp.int32)
+        kp = kp.at[:, pids].set(ck.astype(kp.dtype))
+        vp = vp.at[:, pids].set(cv.astype(vp.dtype))
+    ids = jnp.asarray(page_ids, jnp.int32)
+    row = jnp.full((cache.block_tables.shape[1],), TRASH_PAGE,
+                   jnp.int32).at[:n0].set(ids)
+    return PagedCache(
+        lengths=cache.lengths.at[slot].set(length),
+        block_tables=cache.block_tables.at[slot].set(row),
+        k_pages=kp,
+        v_pages=vp,
+    )
+
+
 def clear_slot(cache: PagedCache, slot: int) -> PagedCache:
     """Point a released slot back at the trash page."""
     return PagedCache(
@@ -139,26 +248,52 @@ def clear_slot(cache: PagedCache, slot: int) -> PagedCache:
     )
 
 
-class BlockAllocator:
-    """Free-list page allocator with watermark (reserve-ahead) admission.
+_PREFIX_ROOT = b"salpim-prefix-root"
 
-    Physical page 0 is never handed out (trash page). `admit` reserves a
-    sequence's worst-case page count up front and allocates only the
-    prompt's pages; `extend` draws one page from the reservation at a
-    decode-step boundary; `release` returns everything. Because
-    admission is gated on `free - reserved`, an admitted sequence can
-    always extend — no preemption, no mid-decode OOM.
+
+def _chain_key(prev: bytes, chunk: np.ndarray) -> bytes:
+    """Hash-chain key for one page-aligned token chunk: folds the parent
+    key in, so equal keys imply equal *prefixes*, not just equal chunks."""
+    h = hashlib.sha256(prev)
+    h.update(np.ascontiguousarray(chunk, np.int64).tobytes())
+    return h.digest()
+
+
+class BlockAllocator:
+    """Free-list page allocator with watermark (reserve-ahead) admission,
+    per-page refcounts, and content-addressed prefix sharing.
+
+    Physical page 0 is never handed out (trash page). `admit` /
+    `admit_tokens` reserve a sequence's worst-case page count up front
+    and allocate only the prompt's pages; `extend` draws one page from
+    the reservation at a decode-step boundary; `release` returns
+    everything. Because admission is gated on `free - reserved`, an
+    admitted sequence can always extend — no preemption, no mid-decode
+    OOM.
+
+    With `prefix_sharing=True`, `admit_tokens` first walks the prefix
+    cache (hash chain over full page-sized token chunks) and maps the
+    longest cached run of pages instead of allocating them: those pages
+    get refcount += 1 and the watermark only reserves the worst case
+    net of shared pages. A shared page must be `fork_page`d (COW) before
+    any write lands in it.
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int,
+                 prefix_sharing: bool = False):
         assert num_pages >= 2, "need at least trash + 1 usable page"
         assert page_size >= 1
         self.num_pages = num_pages
         self.page_size = page_size
+        self.prefix_sharing = prefix_sharing
         self._free = list(range(num_pages - 1, TRASH_PAGE, -1))
         self._reserved = 0
         self._pages: dict[int, list[int]] = {}
-        self._quota: dict[int, int] = {}
+        self._quota: dict[int, int] = {}     # worst-case *new* pages per uid
+        self._owned: dict[int, int] = {}     # pages uid drew from the free list
+        self._ref: dict[int, int] = {}       # physical page -> refcount
+        self._prefix_cache: dict[bytes, int] = {}  # chain key -> phys page
+        self._page_key: dict[int, bytes] = {}      # phys page -> chain key
 
     # -- accounting ---------------------------------------------------------
     @property
@@ -187,6 +322,34 @@ class BlockAllocator:
     def pages_of(self, uid: int) -> list[int]:
         return list(self._pages[uid])
 
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    @property
+    def cached_pages(self) -> int:
+        """Pages currently addressable through the prefix cache."""
+        return len(self._prefix_cache)
+
+    # -- internal helpers ---------------------------------------------------
+    def _alloc(self) -> int:
+        page = self._free.pop()
+        self._ref[page] = 1
+        return page
+
+    def _decref(self, page: int) -> None:
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            del self._ref[page]
+            key = self._page_key.pop(page, None)
+            if key is not None:
+                self._prefix_cache.pop(key, None)
+            self._free.append(page)
+
+    def _register(self, key: bytes, page: int) -> None:
+        if key not in self._prefix_cache and page not in self._page_key:
+            self._prefix_cache[key] = page
+            self._page_key[page] = key
+
     # -- lifecycle ----------------------------------------------------------
     def can_admit(self, prompt_tokens: int, max_new_tokens: int) -> bool:
         worst = self.pages_for(
@@ -195,18 +358,73 @@ class BlockAllocator:
 
     def admit(self, uid: int, prompt_tokens: int,
               max_new_tokens: int) -> Optional[list[int]]:
-        """Reserve worst case, allocate prompt pages. None if over watermark."""
+        """Reserve worst case, allocate prompt pages. None if over watermark.
+
+        Content-free form: no prefix-cache lookup or registration. Use
+        `admit_tokens` to share cached prefix pages.
+        """
         assert uid not in self._pages, f"uid {uid} already admitted"
         worst = self.pages_for(
             self.worst_case_tokens(prompt_tokens, max_new_tokens))
         if self.available_pages < worst:
             return None
         n0 = self.pages_for(prompt_tokens)
-        pages = [self._free.pop() for _ in range(n0)]
+        pages = [self._alloc() for _ in range(n0)]
         self._pages[uid] = pages
         self._quota[uid] = worst
+        self._owned[uid] = n0
         self._reserved += worst - n0
         return list(pages)
+
+    def admit_tokens(self, uid: int, tokens,
+                     max_new_tokens: int) -> Optional[tuple[list[int], int]]:
+        """Admit with prefix reuse: returns (prompt pages, shared tokens).
+
+        Walks the hash chain over `tokens`' full page-sized chunks; the
+        longest cached run is mapped into this sequence (refcount += 1),
+        the rest allocated fresh, and the fresh *full* pages registered
+        for future admissions. The watermark reserves the worst case net
+        of shared pages — plus one fork page when the prompt is fully
+        covered, since the engine then recomputes the last prompt token
+        and its KV write must COW the final shared page. None if over
+        watermark.
+        """
+        assert uid not in self._pages, f"uid {uid} already admitted"
+        tokens = np.asarray(tokens)
+        n_tok = int(tokens.shape[0])
+        ps = self.page_size
+        n_full = n_tok // ps
+        keys: list[bytes] = []
+        if self.prefix_sharing:
+            key = _PREFIX_ROOT
+            for i in range(n_full):
+                key = _chain_key(key, tokens[i * ps:(i + 1) * ps])
+                keys.append(key)
+        hits: list[int] = []
+        for key in keys:
+            page = self._prefix_cache.get(key)
+            if page is None:
+                break
+            hits.append(page)
+        n_shared = len(hits)
+        shared_tokens = n_shared * ps
+        total = self.pages_for(self.worst_case_tokens(n_tok, max_new_tokens))
+        fork = shared_tokens >= n_tok        # fully covered prompt
+        worst_new = total - n_shared + (1 if fork else 0)
+        if self.available_pages < worst_new:
+            return None
+        n0 = self.pages_for(n_tok)
+        fresh = [self._alloc() for _ in range(n0 - n_shared)]
+        for p in hits:
+            self._ref[p] += 1
+        pages = hits + fresh
+        for i in range(n_shared, len(keys)):
+            self._register(keys[i], pages[i])
+        self._pages[uid] = pages
+        self._quota[uid] = worst_new
+        self._owned[uid] = len(fresh)
+        self._reserved += worst_new - len(fresh)
+        return list(pages), shared_tokens
 
     def needs_extend(self, uid: int, next_token_pos: int) -> bool:
         """True when the write at `next_token_pos` falls off mapped pages."""
@@ -215,13 +433,31 @@ class BlockAllocator:
     def extend(self, uid: int) -> int:
         """One more page from uid's reservation (decode-step boundary)."""
         pages = self._pages[uid]
-        assert len(pages) < self._quota[uid], "reservation exhausted"
+        assert self._owned[uid] < self._quota[uid], "reservation exhausted"
         self._reserved -= 1
-        page = self._free.pop()
+        self._owned[uid] += 1
+        page = self._alloc()
         pages.append(page)
         return page
 
+    def fork_page(self, uid: int, logical_idx: int) -> tuple[int, int]:
+        """COW fork: move uid's `logical_idx` page to a private physical
+        page drawn from its reservation. Returns (old, new); the caller
+        must copy the device page (`copy_page`) and repoint the block
+        table before writing."""
+        pages = self._pages[uid]
+        old = pages[logical_idx]
+        assert self._ref[old] > 1, f"fork of unshared page {old}"
+        assert self._owned[uid] < self._quota[uid], "reservation exhausted"
+        self._reserved -= 1
+        self._owned[uid] += 1
+        new = self._alloc()
+        self._decref(old)
+        pages[logical_idx] = new
+        return old, new
+
     def release(self, uid: int) -> None:
         pages = self._pages.pop(uid)
-        self._reserved -= self._quota.pop(uid) - len(pages)
-        self._free.extend(pages)
+        self._reserved -= self._quota.pop(uid) - self._owned.pop(uid)
+        for p in pages:
+            self._decref(p)

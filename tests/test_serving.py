@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.core.salpim import SalPimConfig, SalPimEngine
@@ -77,6 +78,79 @@ def test_continuous_batching_matches_batch_generate():
         np.testing.assert_array_equal(
             np.asarray(by_uid[uid].generated), np.asarray(ref[i]),
             err_msg=f"request {i}")
+
+
+def test_generate_stats_count_only_pre_eos_tokens():
+    """tokens/sec must not be inflated by post-EOS padding: `tokens`
+    counts through each row's first EOS, not B * max_new_tokens."""
+    cfg, params = _setup()
+    prompts = jax.random.randint(KEY, (2, 6), 2, cfg.vocab)
+    gen = GenConfig(max_new_tokens=8, temperature=0.0, eos_id=0,
+                    stop_on_eos=True)
+    toks, stats = generate(params, prompts, cfg, ENGINE, gen)
+    arr = np.asarray(toks)
+    is_eos = arr == 0
+    want = int(np.where(is_eos.any(1), is_eos.argmax(1) + 1,
+                        arr.shape[1]).sum())
+    assert stats["tokens"] == want
+    assert stats["tokens_budget"] == 16
+    assert stats["tokens"] <= stats["tokens_budget"]
+    assert stats["sec_per_token"] > 0
+    # Without early stop, the full budget is generated work.
+    _, stats2 = generate(params, prompts, cfg, ENGINE,
+                         GenConfig(max_new_tokens=8, temperature=0.0,
+                                   stop_on_eos=False))
+    assert stats2["tokens"] == 16
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_released_slot_lengths_stay_frozen(paged):
+    """Regression: decode_step advanced every slot's length uncondition-
+    ally, so released/empty slots crept without bound (and paged idle
+    slots scattered garbage K/V over trash pages each step). After a
+    release the slot must park at length 0 — while the survivor's
+    output is unchanged."""
+    cfg, params = _setup()
+    gen = GenConfig(temperature=0.0, stop_on_eos=False)
+    kwargs = {"paged": True, "page_size": 4} if paged else {}
+    eng = ServingEngine(params, cfg, ENGINE, slots=2, max_len=32, gen=gen,
+                        **kwargs)
+    prompts = np.asarray(jax.random.randint(KEY, (2, 6), 2, cfg.vocab))
+    u_short = eng.submit(prompts[0], max_new_tokens=2)
+    u_long = eng.submit(prompts[1], max_new_tokens=10)
+    slot_of = {}
+    eng.step()
+    slot_of = {r.uid: i for i, r in enumerate(eng.active) if r is not None}
+    done = eng.run(max_steps=100)
+    assert sorted(r.uid for r in done) == sorted([u_short, u_long])
+    s = slot_of[u_short]
+    assert int(eng.cache.lengths[s]) == 0
+    assert int(eng._host_len[s]) == 0
+    # The survivor matches a solo run (idle slots did not perturb it).
+    eng2 = ServingEngine(params, cfg, ENGINE, slots=2, max_len=32, gen=gen,
+                         **kwargs)
+    eng2.submit(prompts[1], max_new_tokens=10)
+    (ref,) = eng2.run(max_steps=100)
+    long_req = next(r for r in done if r.uid == u_long)
+    assert long_req.generated == ref.generated
+
+
+def test_dense_release_resets_slot_length_for_reuse():
+    """A slot that finishes and is re-filled must behave exactly like a
+    fresh admission (stale lengths would offset the new request)."""
+    cfg, params = _setup()
+    gen = GenConfig(temperature=0.0, stop_on_eos=False)
+    eng = ServingEngine(params, cfg, ENGINE, slots=1, max_len=32, gen=gen)
+    prompts = np.asarray(jax.random.randint(KEY, (2, 6), 2, cfg.vocab))
+    eng.submit(prompts[0], max_new_tokens=3)
+    u2 = eng.submit(prompts[1], max_new_tokens=5)   # reuses the one slot
+    done = eng.run(max_steps=100)
+    ref, _ = generate(params, jnp.asarray(prompts[1][None]), cfg, ENGINE,
+                      GenConfig(max_new_tokens=5, temperature=0.0,
+                                stop_on_eos=False))
+    second = next(r for r in done if r.uid == u2)
+    np.testing.assert_array_equal(np.asarray(second.generated),
+                                  np.asarray(ref[0]))
 
 
 def test_serving_with_lut_engine():
