@@ -6,7 +6,6 @@ decode path.
     PYTHONPATH=src python examples/generate_text.py --arch gpt2-medium --smoke
 """
 import argparse
-import time
 
 import jax
 

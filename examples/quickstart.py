@@ -10,7 +10,6 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core.salpim import SalPimConfig, SalPimEngine
 from repro.data import tokens as data_lib
-from repro.models import api
 from repro.runtime import optimizer as opt
 from repro.runtime.train_loop import TrainConfig, run_training
 from repro.serving.engine import GenConfig, generate

@@ -32,6 +32,9 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common prefix of this many tokens to "
                          "every prompt (exercises prefix sharing)")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=None,
+                    help="chunked paged prefill budget per engine step "
+                         "(paged mode; default: whole prompt in one chunk)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=10)
@@ -46,7 +49,8 @@ def main():
                         gen=GenConfig(temperature=0.0, stop_on_eos=False),
                         paged=args.paged, page_size=args.page_size,
                         num_pages=args.num_pages,
-                        prefix_sharing=not args.no_prefix_sharing)
+                        prefix_sharing=not args.no_prefix_sharing,
+                        prefill_chunk_tokens=args.prefill_chunk_tokens)
     rng = np.random.RandomState(0)
     shared = rng.randint(2, cfg.vocab, size=args.shared_prefix)
     uids = []

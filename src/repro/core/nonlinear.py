@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lut as lut_lib
-from repro.core.lut import LutBank, LutTable
+from repro.core.lut import LutBank
 
 Array = jax.Array
 

@@ -151,6 +151,27 @@ class SalPimEngine:
             exp_table=exp_table, softcap=softcap, window=window,
             impl=self.config.impl)
 
+    def paged_prefill_attention(self, q: Array, k_pages: Array,
+                                v_pages: Array, block_tables: Array,
+                                length: Array, start: Array, *,
+                                scale: Optional[float] = None,
+                                softcap: Optional[float] = None,
+                                window=None) -> Array:
+        """Chunked prefill attention reading earlier chunks' K/V back
+        through the block table (kernels/paged_prefill.py). q holds one
+        prompt chunk per sequence at absolute positions start..start+Sq-1;
+        the chunk's own K/V must already be resident in the pool."""
+        exp_table = self.nl.bank.exp if self.nl.mode == "lut" else None
+        if self.config.impl == "reference":
+            return ref_k.paged_prefill_attention_ref(
+                q, k_pages, v_pages, block_tables, length, start,
+                scale=scale, exp_table=exp_table, softcap=softcap,
+                window=window)
+        return ops.pim_paged_prefill_attention(
+            q, k_pages, v_pages, block_tables, length, start, scale=scale,
+            exp_table=exp_table, softcap=softcap, window=window,
+            impl=self.config.impl)
+
     # -- C2: norms -------------------------------------------------------------
     def layernorm(self, x: Array, gamma: Array, beta: Array | None,
                   eps: float = 1e-5) -> Array:

@@ -16,12 +16,11 @@ tests/test_distributed.py and wired to the block stack in launch/train.py.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 Array = jax.Array
 

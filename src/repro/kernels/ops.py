@@ -22,6 +22,7 @@ from repro.kernels import lut_interp as lut_k
 from repro.kernels import gemv_pim as gemv_k
 from repro.kernels import decode_attention as attn_k
 from repro.kernels import paged_attention as paged_k
+from repro.kernels import paged_prefill as paged_pf_k
 from repro.kernels import layernorm_lut as ln_k
 from repro.kernels import softmax_lut as sm_k
 
@@ -123,6 +124,25 @@ def pim_paged_attention(q, k_pages, v_pages, block_tables, length, *,
             exp_table=exp_table, softcap=softcap, window=window)
     return paged_k.paged_attention(
         q, k_pages, v_pages, block_tables, length, scale=scale,
+        exp_table=exp_table, softcap=softcap, window=window,
+        interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "scale", "softcap",
+                                             "window"))
+def pim_paged_prefill_attention(q, k_pages, v_pages, block_tables, length,
+                                start, *, scale=None,
+                                exp_table: LutTable | None = None,
+                                softcap=None, window=None,
+                                impl: str = "reference") -> jax.Array:
+    """Chunked prefill attention over a paged KV pool: q (B, Sq, H, D) at
+    absolute positions start..start+Sq-1 (see serving/kvcache.py)."""
+    if impl == "reference":
+        return ref_k.paged_prefill_attention_ref(
+            q, k_pages, v_pages, block_tables, length, start, scale=scale,
+            exp_table=exp_table, softcap=softcap, window=window)
+    return paged_pf_k.paged_prefill_attention(
+        q, k_pages, v_pages, block_tables, length, start, scale=scale,
         exp_table=exp_table, softcap=softcap, window=window,
         interpret=(impl == "interpret"))
 

@@ -1,0 +1,178 @@
+"""Pallas TPU kernel: chunked paged *prefill* attention over a block-table
+KV pool.
+
+The prefill sibling of `kernels/paged_attention.py`: a chunk of Sq query
+tokens per sequence (prompt positions start .. start+Sq-1) attends to K/V
+that live in the shared page pool — earlier chunks' KV is read back
+through the scalar-prefetched block table, exactly like decode, and the
+chunk's own KV has already been written into its pages by the caller
+(`serving/kvcache.append_chunk_kv_pages`). This is SAL-PIM's parallel
+summarization stage run on the same bank-sequential placement the
+generation stage uses: no dense per-slot prefill arena, no scatter pass.
+
+  * block table + per-sequence lengths + per-sequence chunk starts are
+    `num_scalar_prefetch` inputs, so the BlockSpec index map computes
+    each physical page's DMA address before the body runs;
+  * the body is the decode kernel's online-softmax (m, l, acc) merge
+    across pages — the C-ALU merge of per-bank partials — widened to
+    Sq*g query rows, with a causal mask at absolute positions
+    (key <= start + row//g) on top of the length mask;
+  * exp optionally routes through the same 64-section LUT.
+
+Grid: (B, Hkv, n_pages); q block (Sq*g, D) where g = H // Hkv (GQA
+groups share one K/V page stream; row r is query r//g, group r%g).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lut import LutTable
+from repro.kernels.decode_attention import NEG_INF, _lut_eval
+from repro.kernels.lut_interp import TABLE_PAD
+
+
+def _paged_prefill_kernel(
+    len_ref,    # scalar prefetch: (B,) int32 valid KV lengths (incl. chunk)
+    start_ref,  # scalar prefetch: (B,) int32 absolute first query position
+    tbl_ref,    # scalar prefetch: (B, n_pages) int32 physical page ids
+    q_ref, k_ref, v_ref, expwb_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *, n_pages, page_size, g, scale, use_lut, lo, inv_step, sections,
+    softcap, window,
+):
+    b = pl.program_id(0)
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    start = start_ref[b]
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (Sq*g, D)
+    k = k_ref[0, 0].astype(jnp.float32)          # (page_size, D)
+    # Direction 1: contract head_dim (Q x K^T) — same layout, no transpose.
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+
+    k_pos = (s_idx * page_size
+             + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1))
+    row = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    q_pos = start + row // g                     # absolute query positions
+    mask = jnp.logical_and(k_pos < length, k_pos <= q_pos)
+    if window is not None:
+        mask = jnp.logical_and(mask, k_pos > q_pos - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    # Online softmax across pages: the C-ALU merge of per-bank partials.
+    m_prev = m_ref[...]                          # (Sq*g, 1)
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    if use_lut:
+        p = _lut_eval(scores - m_new, expwb_ref, lo=lo, inv_step=inv_step,
+                      sections=sections)
+        corr = _lut_eval(jnp.maximum(m_prev - m_new, lo), expwb_ref,
+                         lo=lo, inv_step=inv_step, sections=sections)
+    else:
+        p = jnp.exp(scores - m_new)
+        corr = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, p, 0.0)
+
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    # Direction 2: contract seq (S x V) over the same V page.
+    v = v_ref[0, 0].astype(jnp.float32)          # (page_size, D)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_pages - 1)
+    def _writeback():
+        l = jnp.maximum(l_ref[...], 1e-9)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_prefill_attention(
+    q: jax.Array,             # (B, Sq, H, D) one prompt chunk per sequence
+    k_pages: jax.Array,       # (P, Hkv, page_size, D) shared pool
+    v_pages: jax.Array,       # (P, Hkv, page_size, D)
+    block_tables: jax.Array,  # (B, n_pages) int32 physical page ids
+    length: jax.Array,        # (B,) int32 valid KV lengths (start + Sq)
+    start: jax.Array,         # (B,) int32 absolute position of query 0
+    *,
+    scale: float | None = None,
+    exp_table: LutTable | None = None,
+    softcap: float | None = None,
+    window: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, H, D = q.shape
+    Hkv, page_size = k_pages.shape[1], k_pages.shape[2]
+    n_pages = block_tables.shape[1]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+
+    use_lut = exp_table is not None
+    if use_lut:
+        wb = exp_table.wb.astype(jnp.float32)
+        wb = jnp.pad(wb, ((0, TABLE_PAD - wb.shape[0]), (0, 0)))
+        lo, inv_step, sections = (exp_table.lo, exp_table.inv_step,
+                                  exp_table.sections)
+    else:
+        wb = jnp.zeros((TABLE_PAD, 2), jnp.float32)
+        lo, inv_step, sections = -1.0, 1.0, 1
+
+    # (B, Sq, H, D) -> (B, Hkv, Sq*g, D): row r is query r//g, group r%g.
+    qg = (q.reshape(B, Sq, Hkv, g, D)
+          .transpose(0, 2, 1, 3, 4)
+          .reshape(B, Hkv, Sq * g, D))
+    lens = length.astype(jnp.int32)
+    starts = start.astype(jnp.int32)
+    tables = block_tables.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _paged_prefill_kernel, n_pages=n_pages, page_size=page_size, g=g,
+        scale=scale, use_lut=use_lut, lo=lo, inv_step=inv_step,
+        sections=sections, softcap=softcap, window=window,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, Sq * g, D), lambda b, h, s, *_: (b, h, 0, 0)),
+            # Physical page address from the prefetched block table.
+            pl.BlockSpec((1, 1, page_size, D),
+                         lambda b, h, s, lens_ref, start_ref, tbl_ref:
+                         (tbl_ref[b, s], h, 0, 0)),
+            pl.BlockSpec((1, 1, page_size, D),
+                         lambda b, h, s, lens_ref, start_ref, tbl_ref:
+                         (tbl_ref[b, s], h, 0, 0)),
+            pl.BlockSpec((TABLE_PAD, 2), lambda b, h, s, *_: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Sq * g, D),
+                               lambda b, h, s, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Sq * g, 1), jnp.float32),
+            pltpu.VMEM((Sq * g, 1), jnp.float32),
+            pltpu.VMEM((Sq * g, D), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Sq * g, D), q.dtype),
+        interpret=interpret,
+    )(lens, starts, tables, qg, k_pages, v_pages, wb)
+    return (out.reshape(B, Hkv, Sq, g, D)
+            .transpose(0, 2, 1, 3, 4)
+            .reshape(B, Sq, H, D))

@@ -172,6 +172,76 @@ def paged_attention_ref(
         softcap=softcap, window=window)
 
 
+def paged_prefill_attention_ref(
+    q: Array,
+    k_pages: Array,
+    v_pages: Array,
+    block_tables: Array,
+    length: Array,
+    start: Array,
+    *,
+    scale: float | None = None,
+    exp_table: LutTable | None = None,
+    softcap: float | None = None,
+    window: int | None = None,
+) -> Array:
+    """Oracle for kernels/paged_prefill.py.
+
+    q: (B, Sq, H, D) — one prompt chunk per sequence, query i at absolute
+    position start[b] + i. KV for positions [0, length[b]) is resident in
+    the pool (the chunk's own KV already written by the caller). Gathers
+    each sequence's pages dense via the block table and mirrors the dense
+    full-seq prefill math *elementwise* (same einsum forms, max-subtract
+    exp, multiply-by-reciprocal normalization), so chunked paged prefill
+    tracks `models.attention._masked_softmax_attn` bit-for-bit on equal
+    inputs.
+    """
+    B, Sq, H, D = q.shape
+    Hkv, page = k_pages.shape[1], k_pages.shape[2]
+    n_pages = block_tables.shape[1]
+    S = n_pages * page
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    # (B, n_pages, Hkv, page, D) -> seq-major (B, S, Hkv, D), the dense
+    # prefill K/V layout (never a materialized transpose of head_dim).
+    k = jnp.moveaxis(k_pages[block_tables], 2, 1).reshape(
+        B, Hkv, S, D)
+    v = jnp.moveaxis(v_pages[block_tables], 2, 1).reshape(
+        B, Hkv, S, D)
+    k = jnp.moveaxis(k, 1, 2)
+    v = jnp.moveaxis(v, 1, 2)
+
+    qg = q.astype(jnp.float32).reshape(B, Sq, Hkv, g, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+
+    starts = jnp.broadcast_to(jnp.asarray(start), (B,))
+    lens = jnp.broadcast_to(jnp.asarray(length), (B,))
+    q_pos = starts[:, None] + jnp.arange(Sq)[None, :]        # (B, Sq)
+    k_pos = jnp.arange(S)
+    mask = (k_pos[None, None, :] <= q_pos[..., None]) & (
+        k_pos[None, None, :] < lens[:, None, None])
+    if window is not None:
+        mask = mask & (k_pos[None, None, :] > q_pos[..., None] - window)
+    mask_b = mask[:, None, None]                             # (B,1,1,Sq,S)
+
+    scores = jnp.where(mask_b, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    if exp_table is not None:
+        e = lut_lib.apply_table(scores - m, exp_table)
+    else:
+        e = jnp.exp(scores - m)
+    e = jnp.where(mask_b, e, 0.0)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    probs = e * (1.0 / jnp.maximum(s, 1e-9))
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs,
+                     v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
 def layernorm_lut_ref(
     x: Array,
     gamma: Array,

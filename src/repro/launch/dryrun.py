@@ -26,10 +26,9 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs as cfg_lib
-from repro.core.salpim import SalPimEngine, SalPimConfig
+from repro.core.salpim import SalPimEngine
 from repro.distributed import sharding as shard_lib
 from repro.distributed.api import use_mesh
 from repro.launch import hlo_cost
@@ -212,8 +211,6 @@ def main() -> None:
 
     overrides = {}
     if args.override:
-        import repro.models.config as mc
-        fields = {f.name: f.type for f in dataclasses.fields(mc.ModelConfig)}
         for kv in args.override.split(","):
             k, v = kv.split("=")
             if v in ("True", "False"):

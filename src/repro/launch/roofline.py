@@ -116,7 +116,6 @@ def roofline_terms(cost: dict[str, Any], coll_bytes: int) -> dict:
     terms = {"compute": t_compute, "memory": t_memory,
              "collective": t_collective}
     bottleneck = max(terms, key=terms.get)
-    total = max(sum(terms.values()), 1e-30)
     return {
         **{f"t_{k}": v for k, v in terms.items()},
         "bottleneck": bottleneck,

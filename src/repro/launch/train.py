@@ -12,14 +12,10 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import os
-
-import jax
 
 from repro import configs as cfg_lib
-from repro.core.salpim import SalPimConfig, SalPimEngine
+from repro.core.salpim import SalPimEngine
 from repro.data import tokens as data_lib
-from repro.distributed import sharding as shard_lib
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.runtime import optimizer as opt_lib
 from repro.runtime.train_loop import TrainConfig, run_training

@@ -95,15 +95,19 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig, engine: SalPimEngine,
     return tf.prefill(params, batch["tokens"], cfg, engine, max_len=max_len)
 
 
-def prefill_suffix(params: dict, tokens: Array, prefix_k: Array,
-                   prefix_v: Array, cfg: ModelConfig, engine: SalPimEngine):
-    """Prefill a suffix over resident prefix KV (prefix sharing; dense/moe
-    only). tokens (B, S) continue sequences whose first P positions' KV
-    is prefix_k/v (L, B, Hkv, P, Dh); positions are offset by P. Returns
-    (last-position logits, k_suffix, v_suffix)."""
+def prefill_chunk(params: dict, tokens: Array, block_tables: Array,
+                  start: Array, k_pages: Array, v_pages: Array,
+                  cfg: ModelConfig, engine: SalPimEngine):
+    """One chunk of paged prefill (dense/moe only): tokens (B, S) at
+    absolute positions start..start+S-1, K/V written directly into pool
+    pages through block_tables, queries attending over all resident KV.
+    Subsumes the old suffix-only prefill — a shared prefix is just a
+    chunk starting at the shared offset. Returns (last-position logits,
+    k_pages', v_pages')."""
     if cfg.family == "encdec":
-        raise ValueError("prefix sharing unsupported for encdec")
-    return tf.prefill_suffix(params, tokens, prefix_k, prefix_v, cfg, engine)
+        raise ValueError("paged prefill unsupported for encdec")
+    return tf.prefill_chunk(params, tokens, block_tables, start,
+                            k_pages, v_pages, cfg, engine)
 
 
 def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,

@@ -11,7 +11,6 @@ Decode uses the fused kernel path (`engine.decode_attention`).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
@@ -148,27 +147,28 @@ def attention_fullseq(
     return out
 
 
-def attention_prefill_suffix(
+def attention_prefill_chunk_paged(
     p: dict,
-    x: Array,                      # (B, S, D) suffix hidden states
-    prefix_k: Array,               # (B, Hkv, P, Dh) resident prefix KV
-    prefix_v: Array,
+    x: Array,                      # (B, S, D) one prompt chunk per sequence
+    k_pages: Array,                # (P, Hkv, page, Dh) shared pool
+    v_pages: Array,
+    block_tables: Array,           # (B, n_pages) int32
+    start: Array,                  # (B,) absolute position of chunk token 0
+    length: Array,                 # (B,) valid KV after this chunk (start+S)
     cfg: ModelConfig,
     engine: SalPimEngine,
     *,
-    cos: Array | None,             # rope at positions P .. P+S-1
+    cos: Array | None,             # rope at positions start .. start+S-1
     sin: Array | None,
     window,
-    q_offset: int,
 ):
-    """Prefill a suffix whose first `q_offset` positions already have KV.
-
-    The suffix queries attend over the shared prefix KV plus their own
-    fresh KV; the causal/window mask is applied at absolute positions
-    (`q_offset` shifts the query rows). Returns (out, (k, v)) with the
-    suffix K/V in cache layout (B, Hkv, S, Dh) — the prefix KV is
-    resident (shared pages) and is never rewritten.
+    """Chunked paged prefill attention: write the chunk's K/V directly
+    into pool pages, then attend over all resident KV [0, start+S) read
+    back through the block table (earlier chunks included). Returns
+    (out, k_pages', v_pages') — there is no dense K/V to scatter later.
     """
+    from repro.serving.kvcache import append_chunk_kv_pages
+
     B, S, D = x.shape
     q, k, v = _project_qkv(p, x, cfg, engine)
     if cos is not None:
@@ -177,17 +177,18 @@ def attention_prefill_suffix(
     q = constrain(q, "batch", None, "model", None)
     k = constrain(k, "batch", None, "model", None)
     v = constrain(v, "batch", None, "model", None)
-    # Prefix KV to seq-major (B, P, Hkv, Dh) and bank-sequential concat.
-    pk = jnp.moveaxis(prefix_k, 1, 2).astype(k.dtype)
-    pv = jnp.moveaxis(prefix_v, 1, 2).astype(v.dtype)
-    k_all = jnp.concatenate([pk, k], axis=1)
-    v_all = jnp.concatenate([pv, v], axis=1)
-    out = _masked_softmax_attn(q, k_all, v_all, engine, cfg,
-                               q_offset=q_offset, causal=cfg.causal,
-                               window=window)
+    # Bank-sequential placement, chunk-granular: the chunk's K/V lands in
+    # its pages before the read, so queries see their own keys too.
+    k_pages, v_pages = append_chunk_kv_pages(
+        k_pages, v_pages, block_tables, start, k, v)
+
+    scale = cfg.attn_scale if cfg.attn_scale is not None else cfg.head_dim ** -0.5
+    out = engine.paged_prefill_attention(
+        q, k_pages, v_pages, block_tables, length, start, scale=scale,
+        softcap=cfg.attn_softcap, window=window)
     out = engine.linear(out.reshape(B, S, -1), p["wo"])
     out = constrain(out, "batch", None, None)
-    return out, (jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2))
+    return out, k_pages, v_pages
 
 
 def _quantize_vec(x: Array) -> tuple[Array, Array]:

@@ -102,17 +102,20 @@ def apply_decoder_block_prefill(
             causal=cfg.causal, return_kv=True))
 
 
-def apply_decoder_block_prefill_suffix(
-    p: dict, x: Array, prefix_k: Array, prefix_v: Array, cfg: ModelConfig,
-    engine: SalPimEngine, *, cos, sin, window, q_offset: int,
+def apply_decoder_block_prefill_chunk_paged(
+    p: dict, x: Array, k_pages: Array, v_pages: Array, block_tables: Array,
+    start: Array, length: Array, cfg: ModelConfig, engine: SalPimEngine, *,
+    cos, sin, window,
 ):
-    """Prefill block over a suffix with resident prefix KV (prefix
-    sharing). Returns (x', (k_suffix, v_suffix))."""
-    return _prefill_block_skeleton(
+    """Prefill block over one prompt chunk against the paged pool: the
+    chunk's K/V is written directly into pool pages and its queries read
+    all resident KV back through the block table (chunked paged prefill).
+    Returns (x', k_pages', v_pages')."""
+    return _decode_block_skeleton(
         p, x, cfg, engine,
-        lambda h: attn_lib.attention_prefill_suffix(
-            p["attn"], h, prefix_k, prefix_v, cfg, engine, cos=cos,
-            sin=sin, window=window, q_offset=q_offset))
+        lambda h: attn_lib.attention_prefill_chunk_paged(
+            p["attn"], h, k_pages, v_pages, block_tables, start, length,
+            cfg, engine, cos=cos, sin=sin, window=window))
 
 
 def _decode_block_skeleton(p, x, cfg, engine, attn_fn):

@@ -11,7 +11,7 @@ One schema, five families:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax.numpy as jnp
 

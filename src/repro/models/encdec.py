@@ -10,7 +10,6 @@ the most PIM-friendly tensor in the model).
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

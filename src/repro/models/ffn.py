@@ -7,7 +7,6 @@ the activation into the GEMV epilogue on the kernel path.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.salpim import SalPimEngine
 from repro.distributed.api import constrain

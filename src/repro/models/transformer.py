@@ -385,41 +385,51 @@ def _hybrid_prefill(params, x, cfg, engine, cos, sin, lengths, max_len):
     return x, cache
 
 
-def prefill_suffix(params: dict, tokens: Array, prefix_k: Array,
-                   prefix_v: Array, cfg: ModelConfig, engine: SalPimEngine
-                   ) -> tuple[Array, Array, Array]:
-    """Prefill only a suffix: the first `P` positions' KV is already
-    resident (shared prefix pages; prefix_k/v: (L, B, Hkv, P, Dh)).
+def prefill_chunk(params: dict, tokens: Array, block_tables: Array,
+                  start: Array, k_pages: Array, v_pages: Array,
+                  cfg: ModelConfig, engine: SalPimEngine
+                  ) -> tuple[Array, Array, Array]:
+    """One chunk of paged prefill, written directly into pool pages.
 
-    Suffix positions start at P — RoPE / learned positions are offset —
-    and suffix queries attend over the prefix KV. Returns
-    (last-position logits (B, V), k_suffix, v_suffix) with the suffix
-    K/V stacked (L, B, Hkv, S, Dh) for scattering into fresh pages.
+    tokens (B, S) are prompt positions start[b] .. start[b]+S-1 of B
+    sequences whose earlier chunks' K/V already live in the pool pages
+    mapped by block_tables (B, n_pages). RoPE / learned positions are
+    offset by `start`; each layer writes the chunk's K/V into its pages
+    (`append_chunk_kv_pages`) and the chunk's queries attend over all
+    resident KV [0, start+S) through the block table — there is no dense
+    prefill arena and nothing to scatter afterwards. Chunking is exact:
+    running a prompt in any chunk split reproduces the one-shot logits.
+
+    Returns (last-position logits (B, V), k_pages', v_pages').
+    Prefix sharing composes: a shared prompt simply starts its first
+    chunk at the shared offset (the caller COW-forks any shared page the
+    chunk writes into).
     """
     if cfg.family not in ("dense", "moe"):
-        raise ValueError(f"prefix sharing unsupported for family "
+        raise ValueError("paged prefill unsupported for family "
                          f"{cfg.family!r}")
     if cfg.kv_dtype == "int8":
-        raise ValueError("prefix sharing does not support int8 KV yet")
+        raise ValueError("paged prefill does not support int8 KV yet")
     B, S = tokens.shape
-    P = prefix_k.shape[3]
-    pos = jnp.arange(S) + P
+    start = jnp.asarray(start, jnp.int32)
+    pos = start[:, None] + jnp.arange(S)[None, :]            # (B, S)
     x = _embed(params, tokens, cfg,
                positions=pos if cfg.learned_pos_emb else None)
     cos, sin = _rope(cfg, pos)
+    length = start + S
 
     def body(h, layer):
-        bp, window, pk, pv = layer
-        h, (ck, cv) = blk.apply_decoder_block_prefill_suffix(
-            bp, h, pk, pv, cfg, engine, cos=cos, sin=sin, window=window,
-            q_offset=P)
-        return h, (ck, cv)
+        bp, window, kp, vp = layer
+        h, nk, nv = blk.apply_decoder_block_prefill_chunk_paged(
+            bp, h, kp, vp, block_tables, start, length, cfg, engine,
+            cos=cos, sin=sin, window=window)
+        return h, (nk, nv)
 
-    x, (ks, vs) = jax.lax.scan(_maybe_remat(body, cfg), x,
+    x, (nk, nv) = jax.lax.scan(_maybe_remat(body, cfg), x,
                                (params["blocks"], _windows(cfg),
-                                prefix_k, prefix_v))
+                                k_pages, v_pages))
     logits = _logits(params, x[:, -1], cfg, engine)
-    return logits, ks.astype(cfg.cdtype), vs.astype(cfg.cdtype)
+    return logits, nk, nv
 
 
 # ---------------------------------------------------------------------------

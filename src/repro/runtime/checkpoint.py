@@ -30,7 +30,13 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-_WRITER_LOCK = threading.Lock()
+# Serializes every writer — async *and* blocking saves. Without it, two
+# concurrent saves of the same step race: one writer's _gc sweeps the
+# other's in-flight .tmp dir before its rename (the train loop hits this
+# when steps % ckpt_every == 0 fires an async save and the end-of-run
+# blocking save immediately follows for the same step). Re-entrant so
+# save_async's writer thread, which already holds it, can call save().
+_WRITER_LOCK = threading.RLock()
 
 
 def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
@@ -47,35 +53,36 @@ def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
 def save(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[dict] = None,
          keep: int = 3) -> str:
     """Blocking save. Returns the committed directory path."""
-    os.makedirs(ckpt_dir, exist_ok=True)
-    final = os.path.join(ckpt_dir, f"step_{step:08d}")
-    tmp = final + f".tmp-{os.getpid()}-{threading.get_ident()}"
-    os.makedirs(tmp, exist_ok=True)
+    with _WRITER_LOCK:
+        os.makedirs(ckpt_dir, exist_ok=True)
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        tmp = final + f".tmp-{os.getpid()}-{threading.get_ident()}"
+        os.makedirs(tmp, exist_ok=True)
 
-    leaves = _leaf_paths(tree)
-    arrays = {}
-    manifest = {"step": step, "leaves": [], "extra": extra or {},
-                "time": time.time()}
-    for i, (name, leaf) in enumerate(leaves):
-        arr = np.asarray(jax.device_get(leaf))
-        key = f"a{i}"
-        arrays[key] = arr
-        manifest["leaves"].append(
-            {"path": name, "key": key, "shape": list(arr.shape),
-             "dtype": str(arr.dtype)})
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
+        leaves = _leaf_paths(tree)
+        arrays = {}
+        manifest = {"step": step, "leaves": [], "extra": extra or {},
+                    "time": time.time()}
+        for i, (name, leaf) in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            key = f"a{i}"
+            arrays[key] = arr
+            manifest["leaves"].append(
+                {"path": name, "key": key, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype)})
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
 
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
-    with open(os.path.join(final, "_COMMITTED"), "w") as f:
-        f.write(str(step))
-    _gc(ckpt_dir, keep)
-    return final
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        with open(os.path.join(final, "_COMMITTED"), "w") as f:
+            f.write(str(step))
+        _gc(ckpt_dir, keep)
+        return final
 
 
 def save_async(ckpt_dir: str, step: int, tree: Any, *,

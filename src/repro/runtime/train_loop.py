@@ -6,13 +6,11 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import os
 import signal
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.salpim import SalPimEngine

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -112,6 +112,20 @@ class Request:
     max_new_tokens: int
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
+    # Prompt tokens whose KV is already resident in the slot's pages
+    # (continuous batching: a request decodes only once the cursor has
+    # walked the whole prompt, one chunk per engine step).
+    prefill_cursor: int = 0
+    # Tokens covered by prefix-cache pages mapped at admission (paged
+    # mode). Distinguishes pages this request *borrowed* (COW-fork before
+    # any write) from fresh pages it registered itself — the donor keeps
+    # writing its registered pages even after a sharer raises their
+    # refcount, since that write *is* the content sharers mapped.
+    shared_prompt_tokens: int = 0
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prefill_cursor < len(self.prompt)
 
 
 class ServingEngine:
@@ -128,21 +142,34 @@ class ServingEngine:
         moment a request completes — mixed prompt/output lengths no
         longer each pin a full `max_len` arena.
 
+    Paged prefill is *chunked*: prompts are written directly into pool
+    pages, `prefill_chunk_tokens` tokens per engine step (None = the
+    whole prompt in one chunk), with earlier chunks' KV read back
+    through the block table — no dense per-slot prefill arena, no
+    scatter pass. Admission only reserves pages; each step then runs at
+    most one prompt chunk *alongside* the regular decode batch, so a
+    long prompt no longer stalls resident decodes (continuous batching).
+    A mid-prefill slot keeps device length 0 and an all-trash block-table
+    row, so the shared decode program cannot touch its pages; the slot
+    is activated (row + length + first logits) when the cursor reaches
+    the end of the prompt.
+
     Paged mode additionally shares prompt prefixes (`prefix_sharing`,
     on by default): admission walks the allocator's content-addressed
     prefix cache, maps the longest cached run of full pages into the new
-    slot, and prefills only the remaining suffix (positions offset by
-    the shared length). Shared pages are copy-on-write: a KV write that
-    would land in a page with refcount > 1 first forks it into a private
-    physical page. Greedy outputs are bit-identical with sharing on or
-    off — sharing only removes redundant prefill work and pool pressure.
+    slot, and the chunked prefill simply starts at the shared offset.
+    Shared pages are copy-on-write: a KV write that would land in a page
+    with refcount > 1 first forks it into a private physical page.
+    Greedy outputs are bit-identical with sharing on or off and at any
+    chunk size — both only remove redundant work and pool pressure.
     """
 
     def __init__(self, params: dict, model_cfg: ModelConfig,
                  engine: SalPimEngine, *, slots: int, max_len: int,
                  gen: GenConfig = GenConfig(), paged: bool = False,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 prefix_sharing: bool = True, seed: int = 0):
+                 prefix_sharing: bool = True,
+                 prefill_chunk_tokens: Optional[int] = None, seed: int = 0):
         self.params = params
         self.cfg = model_cfg
         self.engine = engine
@@ -163,6 +190,16 @@ class ServingEngine:
         self.peak_pages = 0
 
         self.paged = paged
+        if prefill_chunk_tokens is not None:
+            if prefill_chunk_tokens < 1:
+                raise ValueError("prefill_chunk_tokens must be >= 1, got "
+                                 f"{prefill_chunk_tokens}")
+            if not paged:
+                raise ValueError(
+                    "prefill_chunk_tokens requires paged=True: the dense "
+                    "backend prefills whole prompts into per-slot arenas "
+                    "and would silently ignore the chunk budget")
+        self.prefill_chunk_tokens = prefill_chunk_tokens
         if paged:
             self._kv = kv
             if page_size < 1:
@@ -179,22 +216,32 @@ class ServingEngine:
             self.allocator = None
             self.cache = model_api.init_cache(model_cfg, slots, max_len)
 
+        # The cache is donated: decode and chunk-prefill steps update the
+        # KV arena / page pools in place instead of copying the whole
+        # buffer every step (the engine never touches the stale pytree —
+        # it rebinds self.cache from each call's result).
         self._decode = jax.jit(
             lambda p, tok, cache: model_api.decode_step(
-                p, tok, cache, model_cfg, engine))
-        # Per-slot prefill (batch of 1) — compiled once, reused per admit.
+                p, tok, cache, model_cfg, engine),
+            donate_argnums=(2,))
+        # Per-slot dense prefill (batch of 1) — compiled once per length.
         self._prefill = jax.jit(
             lambda p, toks: model_api.prefill(
                 p, {"tokens": toks}, model_cfg, engine, max_len=max_len))
-        # Suffix-only prefill over a shared prefix (prefix sharing).
-        self._prefill_suffix = jax.jit(
-            lambda p, toks, pk, pv: model_api.prefill_suffix(
-                p, toks, pk, pv, model_cfg, engine))
+        # Paged prefill chunk: writes K/V straight into pool pages.
+        self._prefill_chunk = jax.jit(
+            lambda p, toks, bt, st, kp, vp: model_api.prefill_chunk(
+                p, toks, bt, st, kp, vp, model_cfg, engine),
+            donate_argnums=(4, 5))
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
         prompt = np.asarray(prompt)
         # Both backends size their cache (arena / block-table width) for
-        # max_len tokens; writes past it would be silently dropped.
+        # max_len tokens; writes past it would be silently dropped. The
+        # chunked prefill path makes no difference to the worst case —
+        # chunks land in the same reserved pages — so validate the full
+        # footprint here, before the request is queued and long before
+        # any pages are reserved.
         worst = kv.BlockAllocator.worst_case_tokens(len(prompt),
                                                    max_new_tokens)
         if worst > self.max_len:
@@ -202,6 +249,17 @@ class ServingEngine:
                 f"request can occupy {worst} cache positions "
                 f"(prompt {len(prompt)}, max_new {max_new_tokens}) "
                 f"but max_len is {self.max_len}")
+        if self.paged:
+            # Gross worst-case pages must fit the pool: prefix sharing can
+            # only shrink the bill while a sharer happens to be resident,
+            # which admission cannot rely on — such a request would block
+            # the FIFO head forever once the pool drains.
+            need = self.allocator.pages_for(worst)
+            usable = self.allocator.num_pages - 1
+            if need > usable:
+                raise ValueError(
+                    f"request needs {need} pages worst case but the pool "
+                    f"has {usable}; no reservation was made")
         self._uid += 1
         self.queue.append(Request(self._uid, prompt, max_new_tokens))
         return self._uid
@@ -217,38 +275,6 @@ class ServingEngine:
                                   is_leaf=lambda x: x is None)
         self.last_logits = self.last_logits.at[slot].set(logits1[0])
 
-    def _admit_paged(self, slot: int, req: Request,
-                     pages: list[int], shared_tokens: int):
-        """Fill a slot from prompt pages, prefilling only the unshared
-        suffix. When the prefix cache covers the whole prompt the last
-        token is recomputed (its logits feed sampling) and its KV write
-        COW-forks the final shared page first."""
-        prompt_len = len(req.prompt)
-        suffix_start = min(shared_tokens, prompt_len - 1)
-        if suffix_start < shared_tokens:
-            logical = suffix_start // self.allocator.page_size
-            old, new = self.allocator.fork_page(req.uid, logical)
-            self.cache = self._kv.copy_page(self.cache, old, new)
-            pages[logical] = new
-        if suffix_start > 0:
-            pk, pv = self._kv.gather_prefix_kv(self.cache, pages,
-                                               suffix_start)
-            logits1, k_suf, v_suf = self._prefill_suffix(
-                self.params, jnp.asarray(req.prompt[suffix_start:])[None],
-                pk[:, None], pv[:, None])
-            self.cache = self._kv.write_suffix_pages(
-                self.cache, slot, pages, k_suf[:, 0], v_suf[:, 0],
-                suffix_start, prompt_len)
-        else:
-            logits1, cache1 = self._prefill(
-                self.params, jnp.asarray(req.prompt[None]))
-            self.cache = self._kv.write_prompt_pages(
-                self.cache, slot, pages, cache1.k[:, 0], cache1.v[:, 0],
-                prompt_len)
-        self.last_logits = self.last_logits.at[slot].set(logits1[0])
-        self.prefill_tokens += prompt_len - suffix_start
-        self.prefill_tokens_saved += suffix_start
-
     def _admit(self):
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
@@ -257,13 +283,16 @@ class ServingEngine:
                     # Watermark admission: worst-case pages (net of any
                     # shared prefix pages) must be reservable, else the
                     # whole FIFO waits (no skip — later short requests
-                    # must not starve the head).
+                    # must not starve the head). admit_tokens mutates no
+                    # state on refusal, so a waiting head reserves
+                    # nothing.
                     res = self.allocator.admit_tokens(
                         req.uid, req.prompt, req.max_new_tokens)
                     if res is None:
                         if not any(r is not None for r in self.active):
                             # Nothing holds pages, yet the head still
-                            # doesn't fit: it never will.
+                            # doesn't fit: it never will (submit() bounds
+                            # gross worst case, so this is a safety net).
                             worst = self.allocator.pages_for(
                                 self.allocator.worst_case_tokens(
                                     len(req.prompt), req.max_new_tokens))
@@ -273,17 +302,85 @@ class ServingEngine:
                         break
                 self.queue.pop(0)
                 if self.paged:
-                    self._admit_paged(slot, req, *res)
+                    # Reserve + map prompt pages only; the prompt's KV is
+                    # produced chunk-by-chunk by _prefill_tick. A shared
+                    # prefix just advances the cursor (a fully covered
+                    # prompt recomputes its last token so its logits can
+                    # feed sampling; that chunk COW-forks the shared
+                    # page it writes into).
+                    _, shared_tokens = res
+                    req.shared_prompt_tokens = shared_tokens
+                    req.prefill_cursor = min(shared_tokens,
+                                             len(req.prompt) - 1)
+                    self.prefill_tokens_saved += req.prefill_cursor
+                    self._host_len[slot] = 0
                 else:
                     logits1, cache1 = self._prefill(
                         self.params, jnp.asarray(req.prompt[None]))
                     self._write_slot(slot, cache1, logits1)
                     self.prefill_tokens += len(req.prompt)
-                self._host_len[slot] = len(req.prompt)
+                    req.prefill_cursor = len(req.prompt)
+                    self._host_len[slot] = len(req.prompt)
                 self.active[slot] = req
         if self.paged:
             self.peak_pages = max(self.peak_pages,
                                   self.allocator.used_pages)
+
+    def _prefill_tick(self):
+        """Run at most one prompt chunk (token-budgeted) for the oldest
+        mid-prefill slot. The chunk's K/V goes straight into the slot's
+        reserved pool pages; earlier chunks are read back through the
+        block table. The slot joins the decode batch only when the
+        cursor reaches the end of the prompt.
+
+        Slots prefill strictly in admission (uid) order. That makes the
+        allocator's registration-at-admission of prefix-cache pages safe:
+        a later request that maps a donor's pages cannot run its own
+        first chunk — let alone decode — until the donor's whole prompt
+        (every shared page's contents) has been written."""
+        cand = [(r.uid, i) for i, r in enumerate(self.active)
+                if r is not None and r.prefilling]
+        if not cand:
+            return
+        _, slot = min(cand)
+        req = self.active[slot]
+        start = req.prefill_cursor
+        budget = self.prefill_chunk_tokens or len(req.prompt)
+        end = min(len(req.prompt), start + budget)
+        ps = self.allocator.page_size
+        # COW at chunk granularity: fork any still-shared *borrowed* page
+        # this chunk writes into before the device write (only reachable
+        # for the recomputed last token of a fully covered prompt — other
+        # borrowed pages are full and the cursor starts past them). Pages
+        # past the borrowed prefix are this request's own fresh pages:
+        # writing them is safe at any refcount, because the write is
+        # precisely the registered content later sharers mapped.
+        borrowed = req.shared_prompt_tokens // ps
+        for logical in range(start // ps, min((end - 1) // ps + 1, borrowed)):
+            page = self.allocator.pages_of(req.uid)[logical]
+            if self.allocator.refcount(page) > 1:
+                old, new = self.allocator.fork_page(req.uid, logical)
+                self.cache = self._kv.copy_page(self.cache, old, new)
+        pages = self.allocator.pages_of(req.uid)
+        row = np.full((self.cache.block_tables.shape[1],), kv.TRASH_PAGE,
+                      np.int32)
+        row[:len(pages)] = pages
+        logits1, nk, nv = self._prefill_chunk(
+            self.params, jnp.asarray(req.prompt[start:end])[None],
+            jnp.asarray(row)[None], jnp.asarray([start], jnp.int32),
+            self.cache.k_pages, self.cache.v_pages)
+        lengths, tables = self.cache.lengths, self.cache.block_tables
+        req.prefill_cursor = end
+        self.prefill_tokens += end - start
+        if not req.prefilling:
+            # Activate: only now does the slot become visible to the
+            # shared decode program (row + device length + first logits).
+            lengths = lengths.at[slot].set(end)
+            tables = tables.at[slot].set(jnp.asarray(row))
+            self.last_logits = self.last_logits.at[slot].set(logits1[0])
+            self._host_len[slot] = end
+        self.cache = self._kv.PagedCache(lengths, tables, nk, nv)
+        self.peak_pages = max(self.peak_pages, self.allocator.used_pages)
 
     def _release(self, slot: int, req: Request):
         req.done = True
@@ -300,17 +397,24 @@ class ServingEngine:
         self._host_len[slot] = 0
 
     def step(self) -> int:
-        """One decode step across all occupied slots; returns #active."""
+        """One engine step: admit, run at most one prompt chunk, then one
+        decode step across all fully-prefilled slots. Returns the amount
+        of outstanding work (live decodes + mid-prefill slots + queue)."""
         self._admit()
-        occupied = [i for i, r in enumerate(self.active) if r is not None]
-        if not occupied:
-            return 0
+        if self.paged:
+            self._prefill_tick()
+        n_prefilling = sum(1 for r in self.active
+                           if r is not None and r.prefilling)
+        ready = [i for i, r in enumerate(self.active)
+                 if r is not None and not r.prefilling]
+        if not ready:
+            return n_prefilling + len(self.queue)
         self._key, step_key = jax.random.split(self._key)
         toks = sample(self.last_logits, step_key,
                       temperature=self.gen.temperature, top_k=self.gen.top_k)
         mask = np.zeros((self.slots,), bool)
         host_toks = np.asarray(toks)
-        for i in occupied:
+        for i in ready:
             req = self.active[i]
             req.generated.append(int(host_toks[i]))
             if (len(req.generated) >= req.max_new_tokens
@@ -324,10 +428,12 @@ class ServingEngine:
             # write position falls off the end of a slot's mapped pages
             # (reservations make this infallible for admitted requests),
             # and COW-fork any still-shared page the write would land in
-            # so the append cannot leak into other sequences.
+            # so the append cannot leak into other sequences. Mid-prefill
+            # slots are skipped — their device length is 0, so the decode
+            # append lands in the trash page.
             for i in range(self.slots):
                 req = self.active[i]
-                if req is None:
+                if req is None or req.prefilling:
                     continue
                 pos = int(self._host_len[i])
                 if self.allocator.needs_extend(req.uid, pos):
@@ -348,7 +454,7 @@ class ServingEngine:
         # Only live slots advance; released/empty slots stay parked at 0
         # (decode_step freezes zero-length slots on device too).
         self._host_len += mask
-        return int(mask.sum()) + len(self.queue)
+        return int(mask.sum()) + n_prefilling + len(self.queue)
 
     def _repoint(self, slot: int, logical: int, page: int):
         self.cache = self._kv.PagedCache(

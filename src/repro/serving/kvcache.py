@@ -40,8 +40,19 @@ Prefix sharing (refcount + copy-on-write):
   as long as their page: when a release drops a refcount to zero the
   page returns to the free list and its prefix-cache entry is removed.
 
-The Pallas kernel that reads this layout through a scalar-prefetched
-block table is `kernels/paged_attention.py`.
+Chunked paged prefill:
+
+  Prompts are prefilled in chunks written *directly* into pool pages
+  (`append_chunk_kv_pages`) — there is no dense per-slot prefill arena
+  and no scatter pass. Each chunk's queries read earlier chunks' K/V
+  back through the block table, so a prompt mid-prefill occupies only
+  its own pages and the engine can interleave decode steps between
+  chunks. A chunk that would write into a refcount>1 page COW-forks it
+  first, exactly like decode appends.
+
+The Pallas kernels that read this layout through a scalar-prefetched
+block table are `kernels/paged_attention.py` (decode) and
+`kernels/paged_prefill.py` (chunked prefill).
 """
 from __future__ import annotations
 
@@ -161,81 +172,29 @@ def copy_page(cache: PagedCache, src: int, dst: int) -> PagedCache:
     )
 
 
-def gather_prefix_kv(cache: PagedCache, page_ids: list[int],
-                     prefix_len: int) -> tuple[Array, Array]:
-    """Dense (L, Hkv, prefix_len, Dh) view of a sequence's first pages.
+def append_chunk_kv_pages(k_pages: Array, v_pages: Array,
+                          block_tables: Array, start: Array,
+                          k_new: Array, v_new: Array) -> tuple[Array, Array]:
+    """Write one prefill chunk's K/V at positions start..start+S-1 (traced).
 
-    Used by suffix prefill: the shared prefix KV already lives in the
-    pool; suffix queries attend over this gathered view plus their own
-    fresh KV.
+    k_pages/v_pages: (P, Hkv, page, Dh) one layer's pool; k_new/v_new:
+    (B, S, Hkv, Dh) chunk K/V in projection layout; start: (B,) int32
+    absolute position of the chunk's first token. Every page the chunk
+    touches must already be mapped (and COW-forked out of any sharing)
+    in `block_tables` — rows whose table entries are trash scribble into
+    the trash page harmlessly, like `append_kv_pages`.
     """
-    bs = cache.page_size
-    n = -(-prefix_len // bs)
-    ids = jnp.asarray(page_ids[:n], jnp.int32)
-
-    def gather(pool):
-        pages = pool[:, ids]                       # (L, n, Hkv, bs, Dh)
-        L, _, Hkv, _, Dh = pages.shape
-        dense = jnp.moveaxis(pages, 1, 2).reshape(L, Hkv, n * bs, Dh)
-        return dense[:, :, :prefix_len]
-
-    return gather(cache.k_pages), gather(cache.v_pages)
-
-
-def write_suffix_pages(cache: PagedCache, slot: int, page_ids: list[int],
-                       k_suf: Array, v_suf: Array, start: int, length: int
-                       ) -> PagedCache:
-    """Scatter suffix KV for token positions [start, length) into pages.
-
-    k_suf/v_suf: (L, Hkv, Ssuf, Dh) with Ssuf >= length - start; the
-    first `start` positions of the sequence are already resident (shared
-    prefix pages). Sets the slot's whole block-table row to `page_ids`
-    (trash beyond) and its length to `length`. The page containing
-    `start` may be written partially — the caller must have COW-forked
-    it if it was shared.
-    """
-    bs = cache.page_size
-    n0 = len(page_ids)
-    assert n0 * bs >= length, (n0, bs, length)
-    assert k_suf.shape[2] >= length - start, (k_suf.shape, start, length)
-    kp, vp = cache.k_pages, cache.v_pages
-    aligned = start
-    off = start % bs
-    if off:
-        # Partial first page (the COW-fork case): one targeted update.
-        lp = start // bs
-        b = min(length, (lp + 1) * bs)
-        phys = page_ids[lp]
-        kp = kp.at[:, phys, :, off:off + b - start].set(
-            k_suf[:, :, :b - start].astype(kp.dtype))
-        vp = vp.at[:, phys, :, off:off + b - start].set(
-            v_suf[:, :, :b - start].astype(vp.dtype))
-        aligned = b
-    if aligned < length:
-        # Page-aligned remainder: one combined scatter, like
-        # write_prompt_pages (no per-page pool copies).
-        lp0, lp1 = aligned // bs, -(-length // bs)
-        n = lp1 - lp0
-        L, Hkv, _, Dh = k_suf.shape
-        s0 = aligned - start                       # offset within suffix
-        pad = n * bs - (length - aligned)
-        spec = ((0, 0), (0, 0), (0, pad), (0, 0))
-        ck = jnp.pad(k_suf[:, :, s0:s0 + length - aligned], spec)
-        cv = jnp.pad(v_suf[:, :, s0:s0 + length - aligned], spec)
-        ck = jnp.moveaxis(ck.reshape(L, Hkv, n, bs, Dh), 2, 1)
-        cv = jnp.moveaxis(cv.reshape(L, Hkv, n, bs, Dh), 2, 1)
-        pids = jnp.asarray(page_ids[lp0:lp1], jnp.int32)
-        kp = kp.at[:, pids].set(ck.astype(kp.dtype))
-        vp = vp.at[:, pids].set(cv.astype(vp.dtype))
-    ids = jnp.asarray(page_ids, jnp.int32)
-    row = jnp.full((cache.block_tables.shape[1],), TRASH_PAGE,
-                   jnp.int32).at[:n0].set(ids)
-    return PagedCache(
-        lengths=cache.lengths.at[slot].set(length),
-        block_tables=cache.block_tables.at[slot].set(row),
-        k_pages=kp,
-        v_pages=vp,
-    )
+    page = k_pages.shape[2]
+    S = k_new.shape[1]
+    pos = start[:, None] + jnp.arange(S)[None, :]            # (B, S)
+    logical = pos // page
+    phys = jnp.take_along_axis(block_tables, logical, axis=1)
+    off = pos % page
+    # Advanced indices (B, S) around the Hkv slice: result dims lead, so
+    # the update payload is chunk-major (B, S, Hkv, Dh) — no transpose.
+    k_pages = k_pages.at[phys, :, off].set(k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, :, off].set(v_new.astype(v_pages.dtype))
+    return k_pages, v_pages
 
 
 def clear_slot(cache: PagedCache, slot: int) -> PagedCache:

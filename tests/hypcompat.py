@@ -13,6 +13,9 @@ import inspect
 
 import pytest
 
+# Re-exports for the test modules (`from tests.hypcompat import hyp, st`).
+__all__ = ["HAVE_HYPOTHESIS", "hyp", "st"]
+
 try:
     import hypothesis as hyp
     import hypothesis.strategies as st

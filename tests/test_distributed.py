@@ -3,12 +3,9 @@ tests — sharded==unsharded train step, pipeline parallelism, compressed
 psum, sequence-parallel softmax merge (the C-ALU analogue)."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.configs import cells, get_config, LONG_CONTEXT_SKIP_REASON
+from repro.configs import cells, LONG_CONTEXT_SKIP_REASON
 
 
 def test_cell_listing_counts():
@@ -19,6 +16,7 @@ def test_cell_listing_counts():
     assert len(LONG_CONTEXT_SKIP_REASON) >= 6
 
 
+@pytest.mark.multidevice
 def test_param_pspec_divisibility(subproc):
     """Every rule-produced spec must evenly divide its tensor on the
     production mesh — for every arch (the 12-head qwen2 case etc.)."""
@@ -48,6 +46,7 @@ print("ok")
     assert "ok" in subproc(code, n_devices=8)
 
 
+@pytest.mark.multidevice
 def test_sharded_train_step_matches_unsharded(subproc):
     code = """
 import jax, jax.numpy as jnp, numpy as np
@@ -89,6 +88,7 @@ print("ok", float(m1["loss"]))
     assert "ok" in subproc(code, n_devices=8, timeout=900)
 
 
+@pytest.mark.multidevice
 def test_sharded_decode_matches_unsharded(subproc):
     code = """
 import jax, jax.numpy as jnp, numpy as np, dataclasses
@@ -121,6 +121,7 @@ print("ok")
     assert "ok" in subproc(code, n_devices=8, timeout=900)
 
 
+@pytest.mark.multidevice
 def test_pipeline_forward_equals_sequential(subproc):
     code = """
 import jax, jax.numpy as jnp, numpy as np
@@ -149,6 +150,7 @@ print("ok")
     assert "ok" in subproc(code, n_devices=4, timeout=600)
 
 
+@pytest.mark.multidevice
 def test_compressed_psum_and_softmax_merge(subproc):
     code = """
 import jax, jax.numpy as jnp, numpy as np
@@ -191,6 +193,7 @@ print("ok")
     assert "ok" in subproc(code, n_devices=8, timeout=600)
 
 
+@pytest.mark.multidevice
 def test_long_context_2axis_seq_sharded_decode(subproc):
     """Cell D rule: B=1 long decode shards the KV seq over BOTH axes;
     results must match the unsharded oracle (C-ALU merge correctness)."""

@@ -88,7 +88,7 @@ def test_lut_engine_logits_close_to_exact():
 
 def test_mrope_text_equals_rope():
     """For text-only (equal position streams) M-RoPE must equal RoPE."""
-    from repro.models.rope import apply_rope, mrope_cos_sin, rope_cos_sin
+    from repro.models.rope import mrope_cos_sin, rope_cos_sin
     pos = jnp.arange(13)
     c1, s1 = rope_cos_sin(pos, 32, 10000.0)
     pos3 = jnp.broadcast_to(pos[None], (3, 13))

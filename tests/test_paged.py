@@ -234,7 +234,6 @@ def test_paged_decode_matches_dense_decode(arch):
                                       dense.v[:, b], S)
     logits_p = logits_d
 
-    alloc_next = {b: next_page for b in range(B)}  # manual page growth
     mapped = {b: -(-S // page) for b in range(B)}
     for t in range(steps):
         tok_d = jnp.argmax(logits_d, -1).astype(jnp.int32)
@@ -311,14 +310,18 @@ def test_paged_engine_under_page_pressure():
 
 
 def test_oversized_request_raises_instead_of_spinning():
+    """A request whose gross worst-case page count can never fit the pool
+    is rejected at submit() — before it is queued, long before any pages
+    are reserved — instead of blocking the FIFO head forever."""
     cfg = get_config("gpt2_medium", smoke=True)
     params = api.init_params(KEY, cfg)
     eng = ServingEngine(params, cfg, ENGINE, slots=2, max_len=32,
                         paged=True, page_size=4, num_pages=4)  # 3 usable
-    # Fits max_len (10 + 10 + 1 = 21 <= 32) but needs 6 pages > pool.
-    eng.submit(np.arange(2, 12), max_new_tokens=10)
+    # Fits max_len (10 + 10 - 1 = 19 <= 32) but needs 5 pages > pool.
     with pytest.raises(ValueError, match="pages"):
-        eng.step()
+        eng.submit(np.arange(2, 12), max_new_tokens=10)
+    assert not eng.queue
+    assert eng.allocator.available_pages == 3   # nothing reserved
 
 
 def test_exact_fit_request_is_served():

@@ -76,6 +76,7 @@ def test_int8_kv_cache_decode_uniform_matches_scatter_path():
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.multidevice
 def test_shardmap_moe_matches_gspmd(subproc):
     code = """
 import dataclasses, jax, jax.numpy as jnp, numpy as np
@@ -99,6 +100,7 @@ print("ok")
     assert "ok" in subproc(code, n_devices=8, timeout=900)
 
 
+@pytest.mark.multidevice
 def test_seq_parallel_acts_same_math(subproc):
     code = """
 import dataclasses, jax, jax.numpy as jnp, numpy as np
@@ -122,6 +124,7 @@ print("ok")
     assert "ok" in subproc(code, n_devices=8, timeout=900)
 
 
+@pytest.mark.multidevice
 def test_qtensor_sharding_rules(subproc):
     code = """
 import jax

@@ -12,7 +12,6 @@ from __future__ import annotations
 import itertools
 
 import numpy as np
-import pytest
 
 from repro.pimsim.gpt2 import Gpt2Medium, text_generation_cost
 from repro.pimsim.gpu_model import GpuConfig, text_generation_time

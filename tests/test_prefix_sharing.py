@@ -1,13 +1,13 @@
 """Copy-on-write prefix sharing for the paged KV cache: allocator
-refcounts + hash-chain prefix cache, COW page forks, suffix prefill over
-resident prefix KV, watermark accounting net of shared pages, and
-bit-identical greedy serving with sharing on vs off."""
+refcounts + hash-chain prefix cache, COW page forks, watermark accounting
+net of shared pages, and bit-identical greedy serving with sharing on vs
+off. (The suffix-prefill device ops this file once covered were subsumed
+by chunked paged prefill — see tests/test_chunked_prefill.py.)"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.core.salpim import SalPimConfig, SalPimEngine
@@ -116,7 +116,7 @@ def test_fully_covered_prompt_reserves_fork_page():
 
 
 # ---------------------------------------------------------------------------
-# Device ops: copy_page / gather_prefix_kv / write_suffix_pages
+# Device ops: copy_page
 # ---------------------------------------------------------------------------
 
 def test_copy_page_duplicates_all_layers():
@@ -133,79 +133,6 @@ def test_copy_page_duplicates_all_layers():
     np.testing.assert_allclose(np.asarray(out.v_pages[:, 3]),
                                np.asarray(2 * filled), rtol=1e-6)
     assert float(jnp.abs(out.k_pages[:, 2]).sum()) == 0.0
-
-
-def test_gather_and_write_suffix_roundtrip():
-    cfg, _ = _setup()
-    page = 4
-    cache = kv.init_paged_cache(cfg, batch=1, num_pages=9, page_size=page,
-                                max_pages=4)
-    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
-    length, start = 11, 8
-    kd = jax.random.normal(KEY, (L, Hkv, length, Dh))
-    vd = jax.random.normal(jax.random.PRNGKey(1), (L, Hkv, length, Dh))
-    pages = [3, 5, 7]
-    # Prefix pages written via the full-prompt path, suffix via the new op.
-    cache = kv.write_prompt_pages(cache, 0, pages[:2], kd[:, :, :start],
-                                  vd[:, :, :start], start)
-    cache = kv.write_suffix_pages(cache, 0, pages, kd[:, :, start:],
-                                  vd[:, :, start:], start, length)
-    assert int(cache.lengths[0]) == length
-    assert list(np.asarray(cache.block_tables)[0]) == [3, 5, 7, 0]
-    gk, gv = kv.gather_prefix_kv(cache, pages, length)
-    np.testing.assert_allclose(np.asarray(gk), np.asarray(kd, np.float32),
-                               rtol=1e-6, atol=1e-6)
-    np.testing.assert_allclose(np.asarray(gv), np.asarray(vd, np.float32),
-                               rtol=1e-6, atol=1e-6)
-
-
-def test_write_suffix_partial_page_preserves_prefix_tokens():
-    """A mid-page suffix write (the COW fork case) must not clobber the
-    earlier tokens in that page."""
-    cfg, _ = _setup()
-    page = 4
-    cache = kv.init_paged_cache(cfg, batch=1, num_pages=5, page_size=page,
-                                max_pages=2)
-    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
-    kd = jax.random.normal(KEY, (L, Hkv, 4, Dh))
-    vd = jax.random.normal(jax.random.PRNGKey(1), (L, Hkv, 4, Dh))
-    cache = kv.write_prompt_pages(cache, 0, [2], kd, vd, 4)
-    k_new = jnp.ones((L, Hkv, 1, Dh))
-    cache = kv.write_suffix_pages(cache, 0, [2], k_new, k_new, 3, 4)
-    got_k, _ = kv.gather_prefix_kv(cache, [2], 4)
-    np.testing.assert_allclose(np.asarray(got_k[:, :, :3]),
-                               np.asarray(kd, np.float32)[:, :, :3],
-                               rtol=1e-6, atol=1e-6)
-    np.testing.assert_allclose(np.asarray(got_k[:, :, 3]), 1.0)
-
-
-# ---------------------------------------------------------------------------
-# Suffix prefill == full prefill
-# ---------------------------------------------------------------------------
-
-@pytest.mark.parametrize("arch", ["gpt2_medium", "qwen2_1_5b"])
-def test_prefill_suffix_matches_full_prefill(arch):
-    """Splitting prefill at any point (positions offset by the prefix
-    length, suffix queries attending over prefix KV) must reproduce the
-    full prefill's logits and suffix KV — for learned positions (gpt2)
-    and RoPE (qwen2) alike."""
-    cfg, params = _setup(arch)
-    S, split = 12, 7
-    prompts = jax.random.randint(KEY, (2, S), 2, cfg.vocab)
-    logits_full, cache_full = api.prefill(params, {"tokens": prompts}, cfg,
-                                          ENGINE, max_len=S)
-    _, cache_pre = api.prefill(params, {"tokens": prompts[:, :split]}, cfg,
-                               ENGINE, max_len=split)
-    logits_suf, ks, vs = api.prefill_suffix(
-        params, prompts[:, split:], cache_pre.k, cache_pre.v, cfg, ENGINE)
-    np.testing.assert_allclose(np.asarray(logits_suf),
-                               np.asarray(logits_full), rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(ks),
-                               np.asarray(cache_full.k[:, :, :, split:]),
-                               rtol=1e-5, atol=1e-5)
-    np.testing.assert_allclose(np.asarray(vs),
-                               np.asarray(cache_full.v[:, :, :, split:]),
-                               rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

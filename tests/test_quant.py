@@ -5,7 +5,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from hypcompat import hyp, st
 from repro.core import quant as Q
@@ -73,7 +72,6 @@ def test_paper_claim_16bit_model_accuracy_proxy():
     """Paper Sec 4.1: Q16 costs ~2.8% accuracy on GPT-2-medium. Proxy: a
     reduced GPT-2 forward in fixed16 must keep argmax agreement high and
     logit RMSE small relative to logit scale."""
-    import dataclasses
     from repro.configs import get_config
     from repro.core.salpim import SalPimEngine, SalPimConfig
     from repro.models import api
