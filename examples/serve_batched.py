@@ -35,6 +35,12 @@ def main():
     ap.add_argument("--prefill-chunk-tokens", type=int, default=None,
                     help="chunked paged prefill budget per engine step "
                          "(paged mode; default: whole prompt in one chunk)")
+    ap.add_argument("--kv-cache-dtype", default=None,
+                    choices=["model", "int8"],
+                    help="paged pool storage: int8 stores pages as int8 "
+                         "+ per-(token, head) scale rows (write-time amax "
+                         "quantization, in-kernel dequant) — ~2x KV bytes "
+                         "saved, ~2x pages at the same HBM budget")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=10)
@@ -50,7 +56,8 @@ def main():
                         paged=args.paged, page_size=args.page_size,
                         num_pages=args.num_pages,
                         prefix_sharing=not args.no_prefix_sharing,
-                        prefill_chunk_tokens=args.prefill_chunk_tokens)
+                        prefill_chunk_tokens=args.prefill_chunk_tokens,
+                        kv_cache_dtype=args.kv_cache_dtype)
     rng = np.random.RandomState(0)
     shared = rng.randint(2, cfg.vocab, size=args.shared_prefix)
     uids = []
@@ -59,7 +66,8 @@ def main():
         prompt = np.concatenate([shared, prompt])
         uids.append(eng.submit(prompt, max_new_tokens=int(rng.randint(5, 15))))
     mode = (f"paged (page_size={args.page_size}, "
-            f"{eng.allocator.num_pages} pages)" if args.paged else "dense")
+            f"{eng.allocator.num_pages} pages, kv {eng.kv_cache_dtype})"
+            if args.paged else "dense")
     print(f"submitted {len(uids)} requests into {args.slots} slots [{mode}]")
 
     t0 = time.perf_counter()

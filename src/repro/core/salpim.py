@@ -135,42 +135,49 @@ class SalPimEngine:
 
     def paged_decode_attention(self, q: Array, k_pages: Array,
                                v_pages: Array, block_tables: Array,
-                               length: Array, *,
+                               length: Array,
+                               k_scales: Optional[Array] = None,
+                               v_scales: Optional[Array] = None, *,
                                scale: Optional[float] = None,
                                softcap: Optional[float] = None,
                                window=None) -> Array:
         """Decode attention reading K/V through a block table
-        (serving/kvcache.py pool layout)."""
+        (serving/kvcache.py pool layout). int8 pools pass their scale
+        rows; the kernel dequantizes in VMEM."""
         exp_table = self.nl.bank.exp if self.nl.mode == "lut" else None
         if self.config.impl == "reference":
             return ref_k.paged_attention_ref(
-                q, k_pages, v_pages, block_tables, length, scale=scale,
+                q, k_pages, v_pages, block_tables, length,
+                k_scales, v_scales, scale=scale,
                 exp_table=exp_table, softcap=softcap, window=window)
         return ops.pim_paged_attention(
-            q, k_pages, v_pages, block_tables, length, scale=scale,
-            exp_table=exp_table, softcap=softcap, window=window,
-            impl=self.config.impl)
+            q, k_pages, v_pages, block_tables, length, k_scales, v_scales,
+            scale=scale, exp_table=exp_table, softcap=softcap,
+            window=window, impl=self.config.impl)
 
     def paged_prefill_attention(self, q: Array, k_pages: Array,
                                 v_pages: Array, block_tables: Array,
-                                length: Array, start: Array, *,
+                                length: Array, start: Array,
+                                k_scales: Optional[Array] = None,
+                                v_scales: Optional[Array] = None, *,
                                 scale: Optional[float] = None,
                                 softcap: Optional[float] = None,
                                 window=None) -> Array:
         """Chunked prefill attention reading earlier chunks' K/V back
         through the block table (kernels/paged_prefill.py). q holds one
         prompt chunk per sequence at absolute positions start..start+Sq-1;
-        the chunk's own K/V must already be resident in the pool."""
+        the chunk's own K/V must already be resident in the pool (int8
+        mode: quantized, with its scale rows written)."""
         exp_table = self.nl.bank.exp if self.nl.mode == "lut" else None
         if self.config.impl == "reference":
             return ref_k.paged_prefill_attention_ref(
                 q, k_pages, v_pages, block_tables, length, start,
-                scale=scale, exp_table=exp_table, softcap=softcap,
-                window=window)
+                k_scales, v_scales, scale=scale, exp_table=exp_table,
+                softcap=softcap, window=window)
         return ops.pim_paged_prefill_attention(
-            q, k_pages, v_pages, block_tables, length, start, scale=scale,
-            exp_table=exp_table, softcap=softcap, window=window,
-            impl=self.config.impl)
+            q, k_pages, v_pages, block_tables, length, start,
+            k_scales, v_scales, scale=scale, exp_table=exp_table,
+            softcap=softcap, window=window, impl=self.config.impl)
 
     # -- C2: norms -------------------------------------------------------------
     def layernorm(self, x: Array, gamma: Array, beta: Array | None,

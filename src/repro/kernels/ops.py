@@ -113,38 +113,45 @@ def pim_decode_attention(q, k, v, length, *, scale=None,
 
 @functools.partial(jax.jit, static_argnames=("impl", "scale", "softcap",
                                              "window"))
-def pim_paged_attention(q, k_pages, v_pages, block_tables, length, *,
+def pim_paged_attention(q, k_pages, v_pages, block_tables, length,
+                        k_scales=None, v_scales=None, *,
                         scale=None, exp_table: LutTable | None = None,
                         softcap=None, window=None,
                         impl: str = "reference") -> jax.Array:
-    """Decode attention over a paged KV pool (see serving/kvcache.py)."""
+    """Decode attention over a paged KV pool (see serving/kvcache.py).
+    int8 pools pass their (P, Hkv, page) scale rows as k_scales/v_scales;
+    the kernel dequantizes in VMEM, the oracle after the gather."""
     if impl == "reference":
         return ref_k.paged_attention_ref(
-            q, k_pages, v_pages, block_tables, length, scale=scale,
-            exp_table=exp_table, softcap=softcap, window=window)
+            q, k_pages, v_pages, block_tables, length, k_scales, v_scales,
+            scale=scale, exp_table=exp_table, softcap=softcap,
+            window=window)
     return paged_k.paged_attention(
-        q, k_pages, v_pages, block_tables, length, scale=scale,
-        exp_table=exp_table, softcap=softcap, window=window,
+        q, k_pages, v_pages, block_tables, length, k_scales, v_scales,
+        scale=scale, exp_table=exp_table, softcap=softcap, window=window,
         interpret=(impl == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "scale", "softcap",
                                              "window"))
 def pim_paged_prefill_attention(q, k_pages, v_pages, block_tables, length,
-                                start, *, scale=None,
+                                start, k_scales=None, v_scales=None, *,
+                                scale=None,
                                 exp_table: LutTable | None = None,
                                 softcap=None, window=None,
                                 impl: str = "reference") -> jax.Array:
     """Chunked prefill attention over a paged KV pool: q (B, Sq, H, D) at
-    absolute positions start..start+Sq-1 (see serving/kvcache.py)."""
+    absolute positions start..start+Sq-1 (see serving/kvcache.py).
+    int8 pools pass scale rows as k_scales/v_scales."""
     if impl == "reference":
         return ref_k.paged_prefill_attention_ref(
-            q, k_pages, v_pages, block_tables, length, start, scale=scale,
-            exp_table=exp_table, softcap=softcap, window=window)
+            q, k_pages, v_pages, block_tables, length, start,
+            k_scales, v_scales, scale=scale, exp_table=exp_table,
+            softcap=softcap, window=window)
     return paged_pf_k.paged_prefill_attention(
-        q, k_pages, v_pages, block_tables, length, start, scale=scale,
-        exp_table=exp_table, softcap=softcap, window=window,
-        interpret=(impl == "interpret"))
+        q, k_pages, v_pages, block_tables, length, start,
+        k_scales, v_scales, scale=scale, exp_table=exp_table,
+        softcap=softcap, window=window, interpret=(impl == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "eps", "rms", "plus_one",

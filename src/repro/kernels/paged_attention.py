@@ -14,6 +14,12 @@ scalar-prefetched block table — SAL-PIM's bank-sequential K/V placement
     per-bank partials, and exp optionally routes through the same
     64-section LUT (`_lut_eval`).
 
+int8 pools (`k_scales`/`v_scales` given): the page DMA moves int8
+payload plus one f32 scale row per (page, head) — (Dh + 4) bytes per
+vector instead of 2*Dh for bf16 — and the kernel dequantizes *in VMEM*
+(payload * scale row) before the existing fp32 online-softmax math, so
+the ~2x HBM traffic cut is real while the merge machinery is untouched.
+
 Grid: (B, Hkv, n_pages); q block (group, D) where group = H // Hkv (GQA
 groups share one K/V page stream). Unmapped table entries point at the
 trash page (physical page 0); their positions are masked by `length`.
@@ -35,11 +41,16 @@ from repro.kernels.lut_interp import TABLE_PAD
 def _paged_attn_kernel(
     len_ref,   # scalar prefetch: (B,) int32 valid lengths
     tbl_ref,   # scalar prefetch: (B, n_pages) int32 physical page ids
-    q_ref, k_ref, v_ref, expwb_ref, o_ref,
-    m_ref, l_ref, acc_ref,
-    *, n_pages, page_size, scale, use_lut, lo, inv_step, sections,
-    softcap, window,
+    *refs,     # q, k, v, [ksc, vsc,] expwb, o, then m/l/acc scratch
+    n_pages, page_size, scale, use_lut, lo, inv_step, sections,
+    softcap, window, quantized,
 ):
+    if quantized:
+        (q_ref, k_ref, v_ref, ksc_ref, vsc_ref, expwb_ref, o_ref,
+         m_ref, l_ref, acc_ref) = refs
+    else:
+        q_ref, k_ref, v_ref, expwb_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        ksc_ref = vsc_ref = None
     b = pl.program_id(0)
     s_idx = pl.program_id(2)
 
@@ -53,6 +64,9 @@ def _paged_attn_kernel(
 
     q = q_ref[0, 0].astype(jnp.float32)          # (g, D)
     k = k_ref[0, 0].astype(jnp.float32)          # (page_size, D)
+    if quantized:
+        # In-kernel dequant: the page arrived as int8; scale in VMEM.
+        k = k * ksc_ref[0, 0][:, None]           # (page_size,) scale row
     # Direction 1: contract head_dim (Q x K^T) — same layout, no transpose.
     scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     if softcap is not None:
@@ -82,6 +96,8 @@ def _paged_attn_kernel(
     l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
     # Direction 2: contract seq (S x V) over the same V page.
     v = v_ref[0, 0].astype(jnp.float32)           # (page_size, D)
+    if quantized:
+        v = v * vsc_ref[0, 0][:, None]
     acc_ref[...] = acc_ref[...] * corr + jnp.dot(
         p, v, preferred_element_type=jnp.float32
     )
@@ -99,6 +115,8 @@ def paged_attention(
     v_pages: jax.Array,       # (P, Hkv, page_size, D)
     block_tables: jax.Array,  # (B, n_pages) int32 physical page ids
     length: jax.Array,        # (B,) int32 valid cache lengths
+    k_scales: jax.Array | None = None,  # (P, Hkv, page_size) int8 mode
+    v_scales: jax.Array | None = None,
     *,
     scale: float | None = None,
     exp_table: LutTable | None = None,
@@ -122,29 +140,42 @@ def paged_attention(
         wb = jnp.zeros((TABLE_PAD, 2), jnp.float32)
         lo, inv_step, sections = -1.0, 1.0, 1
 
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("pass both k_scales and v_scales or neither")
     qg = q.reshape(B, Hkv, g, D)
     lens = length.astype(jnp.int32)
     tables = block_tables.astype(jnp.int32)
+    quantized = k_scales is not None
 
     kernel = functools.partial(
         _paged_attn_kernel, n_pages=n_pages, page_size=page_size,
         scale=scale, use_lut=use_lut, lo=lo, inv_step=inv_step,
         sections=sections, softcap=softcap, window=window,
+        quantized=quantized,
     )
+    # Physical page addresses come from the prefetched block table.
+    page_spec = pl.BlockSpec((1, 1, page_size, D),
+                             lambda b, h, s, lens_ref, tbl_ref:
+                             (tbl_ref[b, s], h, 0, 0))
+    scale_spec = pl.BlockSpec((1, 1, page_size),
+                              lambda b, h, s, lens_ref, tbl_ref:
+                              (tbl_ref[b, s], h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, D), lambda b, h, s, *_: (b, h, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    inputs = [qg, k_pages, v_pages]
+    if quantized:
+        in_specs += [scale_spec, scale_spec]
+        inputs += [k_scales.astype(jnp.float32),
+                   v_scales.astype(jnp.float32)]
+    in_specs.append(pl.BlockSpec((TABLE_PAD, 2), lambda b, h, s, *_: (0, 0)))
+    inputs.append(wb)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, D), lambda b, h, s, *_: (b, h, 0, 0)),
-            # Physical page address from the prefetched block table.
-            pl.BlockSpec((1, 1, page_size, D),
-                         lambda b, h, s, lens_ref, tbl_ref:
-                         (tbl_ref[b, s], h, 0, 0)),
-            pl.BlockSpec((1, 1, page_size, D),
-                         lambda b, h, s, lens_ref, tbl_ref:
-                         (tbl_ref[b, s], h, 0, 0)),
-            pl.BlockSpec((TABLE_PAD, 2), lambda b, h, s, *_: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, D), lambda b, h, s, *_: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),
@@ -158,5 +189,5 @@ def paged_attention(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, g, D), q.dtype),
         interpret=interpret,
-    )(lens, tables, qg, k_pages, v_pages, wb)
+    )(lens, tables, *inputs)
     return out.reshape(B, H, D)

@@ -17,7 +17,11 @@ generation stage uses: no dense per-slot prefill arena, no scatter pass.
     across pages — the C-ALU merge of per-bank partials — widened to
     Sq*g query rows, with a causal mask at absolute positions
     (key <= start + row//g) on top of the length mask;
-  * exp optionally routes through the same 64-section LUT.
+  * exp optionally routes through the same 64-section LUT;
+  * int8 pools (`k_scales`/`v_scales` given) dequantize in VMEM right
+    after the page DMA (payload * per-(page, head) f32 scale row), the
+    same in-kernel dequant as `kernels/paged_attention.py` — the chunk's
+    own K/V was already amax-quantized at write time by the caller.
 
 Grid: (B, Hkv, n_pages); q block (Sq*g, D) where g = H // Hkv (GQA
 groups share one K/V page stream; row r is query r//g, group r%g).
@@ -40,11 +44,16 @@ def _paged_prefill_kernel(
     len_ref,    # scalar prefetch: (B,) int32 valid KV lengths (incl. chunk)
     start_ref,  # scalar prefetch: (B,) int32 absolute first query position
     tbl_ref,    # scalar prefetch: (B, n_pages) int32 physical page ids
-    q_ref, k_ref, v_ref, expwb_ref, o_ref,
-    m_ref, l_ref, acc_ref,
-    *, n_pages, page_size, g, scale, use_lut, lo, inv_step, sections,
-    softcap, window,
+    *refs,      # q, k, v, [ksc, vsc,] expwb, o, then m/l/acc scratch
+    n_pages, page_size, g, scale, use_lut, lo, inv_step, sections,
+    softcap, window, quantized,
 ):
+    if quantized:
+        (q_ref, k_ref, v_ref, ksc_ref, vsc_ref, expwb_ref, o_ref,
+         m_ref, l_ref, acc_ref) = refs
+    else:
+        q_ref, k_ref, v_ref, expwb_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        ksc_ref = vsc_ref = None
     b = pl.program_id(0)
     s_idx = pl.program_id(2)
 
@@ -59,6 +68,9 @@ def _paged_prefill_kernel(
 
     q = q_ref[0, 0].astype(jnp.float32)          # (Sq*g, D)
     k = k_ref[0, 0].astype(jnp.float32)          # (page_size, D)
+    if quantized:
+        # In-kernel dequant: the page arrived as int8; scale in VMEM.
+        k = k * ksc_ref[0, 0][:, None]           # (page_size,) scale row
     # Direction 1: contract head_dim (Q x K^T) — same layout, no transpose.
     scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     if softcap is not None:
@@ -90,6 +102,8 @@ def _paged_prefill_kernel(
     l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
     # Direction 2: contract seq (S x V) over the same V page.
     v = v_ref[0, 0].astype(jnp.float32)          # (page_size, D)
+    if quantized:
+        v = v * vsc_ref[0, 0][:, None]
     acc_ref[...] = acc_ref[...] * corr + jnp.dot(
         p, v, preferred_element_type=jnp.float32
     )
@@ -108,6 +122,8 @@ def paged_prefill_attention(
     block_tables: jax.Array,  # (B, n_pages) int32 physical page ids
     length: jax.Array,        # (B,) int32 valid KV lengths (start + Sq)
     start: jax.Array,         # (B,) int32 absolute position of query 0
+    k_scales: jax.Array | None = None,  # (P, Hkv, page_size) int8 mode
+    v_scales: jax.Array | None = None,
     *,
     scale: float | None = None,
     exp_table: LutTable | None = None,
@@ -135,29 +151,42 @@ def paged_prefill_attention(
     qg = (q.reshape(B, Sq, Hkv, g, D)
           .transpose(0, 2, 1, 3, 4)
           .reshape(B, Hkv, Sq * g, D))
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("pass both k_scales and v_scales or neither")
     lens = length.astype(jnp.int32)
     starts = start.astype(jnp.int32)
     tables = block_tables.astype(jnp.int32)
+    quantized = k_scales is not None
 
     kernel = functools.partial(
         _paged_prefill_kernel, n_pages=n_pages, page_size=page_size, g=g,
         scale=scale, use_lut=use_lut, lo=lo, inv_step=inv_step,
         sections=sections, softcap=softcap, window=window,
+        quantized=quantized,
     )
+    # Physical page addresses come from the prefetched block table.
+    page_spec = pl.BlockSpec((1, 1, page_size, D),
+                             lambda b, h, s, lens_ref, start_ref, tbl_ref:
+                             (tbl_ref[b, s], h, 0, 0))
+    scale_spec = pl.BlockSpec((1, 1, page_size),
+                              lambda b, h, s, lens_ref, start_ref, tbl_ref:
+                              (tbl_ref[b, s], h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, Sq * g, D), lambda b, h, s, *_: (b, h, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    inputs = [qg, k_pages, v_pages]
+    if quantized:
+        in_specs += [scale_spec, scale_spec]
+        inputs += [k_scales.astype(jnp.float32),
+                   v_scales.astype(jnp.float32)]
+    in_specs.append(pl.BlockSpec((TABLE_PAD, 2), lambda b, h, s, *_: (0, 0)))
+    inputs.append(wb)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, Hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, Sq * g, D), lambda b, h, s, *_: (b, h, 0, 0)),
-            # Physical page address from the prefetched block table.
-            pl.BlockSpec((1, 1, page_size, D),
-                         lambda b, h, s, lens_ref, start_ref, tbl_ref:
-                         (tbl_ref[b, s], h, 0, 0)),
-            pl.BlockSpec((1, 1, page_size, D),
-                         lambda b, h, s, lens_ref, start_ref, tbl_ref:
-                         (tbl_ref[b, s], h, 0, 0)),
-            pl.BlockSpec((TABLE_PAD, 2), lambda b, h, s, *_: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, Sq * g, D),
                                lambda b, h, s, *_: (b, h, 0, 0)),
         scratch_shapes=[
@@ -172,7 +201,7 @@ def paged_prefill_attention(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, Sq * g, D), q.dtype),
         interpret=interpret,
-    )(lens, starts, tables, qg, k_pages, v_pages, wb)
+    )(lens, starts, tables, *inputs)
     return (out.reshape(B, Hkv, Sq, g, D)
             .transpose(0, 2, 1, 3, 4)
             .reshape(B, Sq, H, D))

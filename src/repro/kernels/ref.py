@@ -137,12 +137,52 @@ def decode_attention_ref(
     return out.reshape(B, H, D).astype(q.dtype)
 
 
+def quantize_kv_ref(x: Array) -> tuple[Array, Array]:
+    """Write-time KV quantization oracle: symmetric per-(…, vector) amax
+    to int8 + f32 scale — exactly `serving/quantize.quantize_vec`, which
+    is what both paged append paths execute on device."""
+    from repro.serving.quantize import quantize_vec
+    return quantize_vec(x)
+
+
+def kv_roundtrip_ref(x: Array) -> Array:
+    """Quantize→dequantize oracle: the int8 pool's view of fp K/V.
+
+    Kernel tests bound the int8 paged kernels' error with this: running
+    the fp oracle on `kv_roundtrip_ref(k/v)` must match the int8 kernel
+    on the quantized pool *elementwise* (same math, same rounding), and
+    its distance from the un-quantized fp oracle is the quantization
+    error envelope itself (~1/127 relative per vector).
+    """
+    from repro.serving.quantize import dequantize_vec
+    q, scale = quantize_kv_ref(x)
+    return dequantize_vec(q, scale, jnp.float32)
+
+
+def _gather_paged_kv(pages: Array, scales: Array | None,
+                     block_tables: Array) -> Array:
+    """(P, Hkv, page, D) pool -> dense (B, Hkv, S, D) via block tables,
+    dequantizing int8 payloads with their gathered scale rows."""
+    B, n_pages = block_tables.shape
+    Hkv, page, D = pages.shape[1], pages.shape[2], pages.shape[3]
+    # (B, n_pages, Hkv, page, D) -> (B, Hkv, n_pages * page, D)
+    x = jnp.moveaxis(pages[block_tables], 2, 1).reshape(
+        B, Hkv, n_pages * page, D)
+    if scales is not None:
+        s = jnp.moveaxis(scales[block_tables], 2, 1).reshape(
+            B, Hkv, n_pages * page)
+        x = x.astype(jnp.float32) * s[..., None].astype(jnp.float32)
+    return x
+
+
 def paged_attention_ref(
     q: Array,
     k_pages: Array,
     v_pages: Array,
     block_tables: Array,
     length: Array,
+    k_scales: Array | None = None,
+    v_scales: Array | None = None,
     *,
     scale: float | None = None,
     exp_table: LutTable | None = None,
@@ -153,20 +193,15 @@ def paged_attention_ref(
 
     Gathers each sequence's pages back into a dense (B, Hkv, S, D) view
     via its block table, then defers to `decode_attention_ref` — paged
-    reads must be *exactly* dense reads on the gathered layout.
+    reads must be *exactly* dense reads on the gathered layout. int8
+    pools (k_scales/v_scales given) are dequantized after the gather,
+    elementwise identical to the kernel's in-VMEM dequant.
 
     q: (B, H, D); k_pages/v_pages: (P, Hkv, page, D) shared pool;
     block_tables: (B, n_pages) int32 physical page ids; length: (B,).
     """
-    B = q.shape[0]
-    Hkv, page = k_pages.shape[1], k_pages.shape[2]
-    n_pages = block_tables.shape[1]
-    D = k_pages.shape[3]
-    # (B, n_pages, Hkv, page, D) -> (B, Hkv, n_pages * page, D)
-    k = jnp.moveaxis(k_pages[block_tables], 2, 1).reshape(
-        B, Hkv, n_pages * page, D)
-    v = jnp.moveaxis(v_pages[block_tables], 2, 1).reshape(
-        B, Hkv, n_pages * page, D)
+    k = _gather_paged_kv(k_pages, k_scales, block_tables)
+    v = _gather_paged_kv(v_pages, v_scales, block_tables)
     return decode_attention_ref(
         q, k, v, length, scale=scale, exp_table=exp_table,
         softcap=softcap, window=window)
@@ -179,6 +214,8 @@ def paged_prefill_attention_ref(
     block_tables: Array,
     length: Array,
     start: Array,
+    k_scales: Array | None = None,
+    v_scales: Array | None = None,
     *,
     scale: float | None = None,
     exp_table: LutTable | None = None,
@@ -194,7 +231,8 @@ def paged_prefill_attention_ref(
     full-seq prefill math *elementwise* (same einsum forms, max-subtract
     exp, multiply-by-reciprocal normalization), so chunked paged prefill
     tracks `models.attention._masked_softmax_attn` bit-for-bit on equal
-    inputs.
+    inputs. int8 pools are dequantized after the gather, elementwise
+    identical to the kernel's in-VMEM dequant.
     """
     B, Sq, H, D = q.shape
     Hkv, page = k_pages.shape[1], k_pages.shape[2]
@@ -202,12 +240,10 @@ def paged_prefill_attention_ref(
     S = n_pages * page
     g = H // Hkv
     scale = scale if scale is not None else 1.0 / (D**0.5)
-    # (B, n_pages, Hkv, page, D) -> seq-major (B, S, Hkv, D), the dense
+    # Gather to (B, Hkv, S, D), then seq-major (B, S, Hkv, D) — the dense
     # prefill K/V layout (never a materialized transpose of head_dim).
-    k = jnp.moveaxis(k_pages[block_tables], 2, 1).reshape(
-        B, Hkv, S, D)
-    v = jnp.moveaxis(v_pages[block_tables], 2, 1).reshape(
-        B, Hkv, S, D)
+    k = _gather_paged_kv(k_pages, k_scales, block_tables)
+    v = _gather_paged_kv(v_pages, v_scales, block_tables)
     k = jnp.moveaxis(k, 1, 2)
     v = jnp.moveaxis(v, 1, 2)
 

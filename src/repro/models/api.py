@@ -97,17 +97,21 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig, engine: SalPimEngine,
 
 def prefill_chunk(params: dict, tokens: Array, block_tables: Array,
                   start: Array, k_pages: Array, v_pages: Array,
-                  cfg: ModelConfig, engine: SalPimEngine):
+                  cfg: ModelConfig, engine: SalPimEngine,
+                  k_scales: Array | None = None,
+                  v_scales: Array | None = None):
     """One chunk of paged prefill (dense/moe only): tokens (B, S) at
     absolute positions start..start+S-1, K/V written directly into pool
     pages through block_tables, queries attending over all resident KV.
     Subsumes the old suffix-only prefill — a shared prefix is just a
     chunk starting at the shared offset. Returns (last-position logits,
-    k_pages', v_pages')."""
+    k_pages', v_pages'); int8 pools (scale pools given) quantize the
+    chunk at write time and return the 5-tuple with updated scales."""
     if cfg.family == "encdec":
         raise ValueError("paged prefill unsupported for encdec")
     return tf.prefill_chunk(params, tokens, block_tables, start,
-                            k_pages, v_pages, cfg, engine)
+                            k_pages, v_pages, cfg, engine,
+                            k_scales, v_scales)
 
 
 def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,
@@ -120,12 +124,17 @@ def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,
 
 
 def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
-                     page_size: int, max_pages: int):
-    """Paged KV cache (dense/moe families; see serving/kvcache.py)."""
+                     page_size: int, max_pages: int,
+                     kv_dtype: str | None = None):
+    """Paged KV cache (dense/moe families; see serving/kvcache.py).
+
+    kv_dtype None defers to cfg.kv_dtype ("model" = compute dtype;
+    "int8" = int8 payload pools + f32 scale-row pools)."""
     from repro.serving.kvcache import init_paged_cache as _init
     if cfg.family not in ("dense", "moe"):
         raise ValueError(f"paged cache unsupported for family {cfg.family!r}")
-    return _init(cfg, batch, num_pages, page_size, max_pages)
+    return _init(cfg, batch, num_pages, page_size, max_pages,
+                 kv_dtype=kv_dtype if kv_dtype is not None else cfg.kv_dtype)
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:

@@ -161,11 +161,15 @@ def attention_prefill_chunk_paged(
     cos: Array | None,             # rope at positions start .. start+S-1
     sin: Array | None,
     window,
+    k_scale: Array | None = None,  # (P, Hkv, page) int8-pool scale rows
+    v_scale: Array | None = None,
 ):
     """Chunked paged prefill attention: write the chunk's K/V directly
     into pool pages, then attend over all resident KV [0, start+S) read
     back through the block table (earlier chunks included). Returns
     (out, k_pages', v_pages') — there is no dense K/V to scatter later.
+    int8 pools (scale rows given) quantize the chunk at write time and
+    return (out, k_pages', v_pages', k_scale', v_scale').
     """
     from repro.serving.kvcache import append_chunk_kv_pages
 
@@ -179,25 +183,30 @@ def attention_prefill_chunk_paged(
     v = constrain(v, "batch", None, "model", None)
     # Bank-sequential placement, chunk-granular: the chunk's K/V lands in
     # its pages before the read, so queries see their own keys too.
-    k_pages, v_pages = append_chunk_kv_pages(
-        k_pages, v_pages, block_tables, start, k, v)
+    int8_kv = k_scale is not None
+    if int8_kv:
+        k_pages, v_pages, k_scale, v_scale = append_chunk_kv_pages(
+            k_pages, v_pages, block_tables, start, k, v, k_scale, v_scale)
+    else:
+        k_pages, v_pages = append_chunk_kv_pages(
+            k_pages, v_pages, block_tables, start, k, v)
 
     scale = cfg.attn_scale if cfg.attn_scale is not None else cfg.head_dim ** -0.5
     out = engine.paged_prefill_attention(
-        q, k_pages, v_pages, block_tables, length, start, scale=scale,
-        softcap=cfg.attn_softcap, window=window)
+        q, k_pages, v_pages, block_tables, length, start, k_scale, v_scale,
+        scale=scale, softcap=cfg.attn_softcap, window=window)
     out = engine.linear(out.reshape(B, S, -1), p["wo"])
     out = constrain(out, "batch", None, None)
+    if int8_kv:
+        return out, k_pages, v_pages, k_scale, v_scale
     return out, k_pages, v_pages
 
 
 def _quantize_vec(x: Array) -> tuple[Array, Array]:
-    """(..., D) -> int8 + (...) scale (per-vector symmetric)."""
-    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
-    scale = jnp.maximum(absmax, 1e-8) / 127.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
-                 -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.bfloat16)
+    """(..., D) -> int8 + (...) bf16 scale; the dense int8 KV arena's
+    storage form of `serving/quantize.quantize_vec`."""
+    from repro.serving.quantize import quantize_vec
+    return quantize_vec(x, scale_dtype=jnp.bfloat16)
 
 
 def _decode_qkv(p: dict, x: Array, cfg: ModelConfig, engine: SalPimEngine,
@@ -227,23 +236,34 @@ def attention_decode_paged(
     cos: Array | None,
     sin: Array | None,
     window: Optional[int] = None,
+    k_scale: Array | None = None,  # (P, Hkv, page) int8-pool scale rows
+    v_scale: Array | None = None,
 ):
-    """One decode step against a paged cache; returns (out, k', v')."""
+    """One decode step against a paged cache; returns (out, k', v').
+    int8 pools (scale rows given) quantize the append at write time and
+    return (out, k', v', k_scale', v_scale')."""
     from repro.serving.kvcache import append_kv_pages
 
     B, _ = x.shape
     q, k, v = _decode_qkv(p, x, cfg, engine, cos, sin)
 
     # Bank-sequential concat, page-granular: append at each slot's length.
-    k_pages, v_pages = append_kv_pages(
-        k_pages, v_pages, block_tables, lengths, k, v)
+    int8_kv = k_scale is not None
+    if int8_kv:
+        k_pages, v_pages, k_scale, v_scale = append_kv_pages(
+            k_pages, v_pages, block_tables, lengths, k, v, k_scale, v_scale)
+    else:
+        k_pages, v_pages = append_kv_pages(
+            k_pages, v_pages, block_tables, lengths, k, v)
     valid = lengths + 1
 
     scale = cfg.attn_scale if cfg.attn_scale is not None else cfg.head_dim ** -0.5
     out = engine.paged_decode_attention(
-        q, k_pages, v_pages, block_tables, valid, scale=scale,
-        softcap=cfg.attn_softcap, window=window)
+        q, k_pages, v_pages, block_tables, valid, k_scale, v_scale,
+        scale=scale, softcap=cfg.attn_softcap, window=window)
     out = engine.linear(out.reshape(B, -1), p["wo"])
+    if int8_kv:
+        return out, k_pages, v_pages, k_scale, v_scale
     return out, k_pages, v_pages
 
 

@@ -105,17 +105,20 @@ def apply_decoder_block_prefill(
 def apply_decoder_block_prefill_chunk_paged(
     p: dict, x: Array, k_pages: Array, v_pages: Array, block_tables: Array,
     start: Array, length: Array, cfg: ModelConfig, engine: SalPimEngine, *,
-    cos, sin, window,
+    cos, sin, window, kv_scales=None,
 ):
     """Prefill block over one prompt chunk against the paged pool: the
     chunk's K/V is written directly into pool pages and its queries read
     all resident KV back through the block table (chunked paged prefill).
-    Returns (x', k_pages', v_pages')."""
+    Returns (x', k_pages', v_pages'[, k_scale', v_scale'] — the scale
+    pools ride along in int8-KV mode)."""
+    ksc, vsc = kv_scales if kv_scales is not None else (None, None)
     return _decode_block_skeleton(
         p, x, cfg, engine,
         lambda h: attn_lib.attention_prefill_chunk_paged(
             p["attn"], h, k_pages, v_pages, block_tables, start, length,
-            cfg, engine, cos=cos, sin=sin, window=window))
+            cfg, engine, cos=cos, sin=sin, window=window,
+            k_scale=ksc, v_scale=vsc))
 
 
 def _decode_block_skeleton(p, x, cfg, engine, attn_fn):
@@ -138,14 +141,17 @@ def _decode_block_skeleton(p, x, cfg, engine, attn_fn):
 def apply_decoder_block_decode_paged(
     p: dict, x: Array, k_pages: Array, v_pages: Array, block_tables: Array,
     lengths: Array, cfg: ModelConfig, engine: SalPimEngine, *, cos, sin,
-    window,
+    window, kv_scales=None,
 ):
-    """Single-token step against a paged cache. Returns (x', k', v')."""
+    """Single-token step against a paged cache. Returns (x', k', v'
+    [, k_scale', v_scale'] — scale pools ride along in int8-KV mode)."""
+    ksc, vsc = kv_scales if kv_scales is not None else (None, None)
     return _decode_block_skeleton(
         p, x, cfg, engine,
         lambda h: attn_lib.attention_decode_paged(
             p["attn"], h, k_pages, v_pages, block_tables, lengths, cfg,
-            engine, cos=cos, sin=sin, window=window))
+            engine, cos=cos, sin=sin, window=window,
+            k_scale=ksc, v_scale=vsc))
 
 
 def apply_decoder_block_decode(

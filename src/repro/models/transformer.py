@@ -387,8 +387,9 @@ def _hybrid_prefill(params, x, cfg, engine, cos, sin, lengths, max_len):
 
 def prefill_chunk(params: dict, tokens: Array, block_tables: Array,
                   start: Array, k_pages: Array, v_pages: Array,
-                  cfg: ModelConfig, engine: SalPimEngine
-                  ) -> tuple[Array, Array, Array]:
+                  cfg: ModelConfig, engine: SalPimEngine,
+                  k_scales: Array | None = None,
+                  v_scales: Array | None = None):
     """One chunk of paged prefill, written directly into pool pages.
 
     tokens (B, S) are prompt positions start[b] .. start[b]+S-1 of B
@@ -401,15 +402,20 @@ def prefill_chunk(params: dict, tokens: Array, block_tables: Array,
     running a prompt in any chunk split reproduces the one-shot logits.
 
     Returns (last-position logits (B, V), k_pages', v_pages').
-    Prefix sharing composes: a shared prompt simply starts its first
-    chunk at the shared offset (the caller COW-forks any shared page the
-    chunk writes into).
+    int8 pools (k_scales/v_scales (L, P, Hkv, page) given) quantize each
+    chunk at write time and return the 5-tuple with the updated scale
+    pools. Prefix sharing composes: a shared prompt simply starts its
+    first chunk at the shared offset (the caller COW-forks any shared
+    page — payload and scale row — the chunk writes into).
     """
     if cfg.family not in ("dense", "moe"):
         raise ValueError("paged prefill unsupported for family "
                          f"{cfg.family!r}")
-    if cfg.kv_dtype == "int8":
-        raise ValueError("paged prefill does not support int8 KV yet")
+    if k_pages.dtype == jnp.int8 and k_scales is None:
+        # Without this the fp write branch would astype float K/V to
+        # int8 — silent garbage instead of a quantized write.
+        raise ValueError("int8 page pools need their scale pools: pass "
+                         "k_scales/v_scales from the PagedCache")
     B, S = tokens.shape
     start = jnp.asarray(start, jnp.int32)
     pos = start[:, None] + jnp.arange(S)[None, :]            # (B, S)
@@ -417,18 +423,26 @@ def prefill_chunk(params: dict, tokens: Array, block_tables: Array,
                positions=pos if cfg.learned_pos_emb else None)
     cos, sin = _rope(cfg, pos)
     length = start + S
+    int8_kv = k_scales is not None
 
+    # One scan body for both pool dtypes: None scale leaves ride through
+    # the scan's xs/ys pytrees untouched (lax.scan slices only array
+    # leaves), so the fp and int8 paths cannot drift apart.
     def body(h, layer):
-        bp, window, kp, vp = layer
-        h, nk, nv = blk.apply_decoder_block_prefill_chunk_paged(
+        bp, window, kp, vp, ksc, vsc = layer
+        h, nk, nv, *nsc = blk.apply_decoder_block_prefill_chunk_paged(
             bp, h, kp, vp, block_tables, start, length, cfg, engine,
-            cos=cos, sin=sin, window=window)
-        return h, (nk, nv)
+            cos=cos, sin=sin, window=window,
+            kv_scales=(ksc, vsc) if ksc is not None else None)
+        return h, (nk, nv, *(nsc or (None, None)))
 
-    x, (nk, nv) = jax.lax.scan(_maybe_remat(body, cfg), x,
-                               (params["blocks"], _windows(cfg),
-                                k_pages, v_pages))
+    x, (nk, nv, nks, nvs) = jax.lax.scan(
+        _maybe_remat(body, cfg), x,
+        (params["blocks"], _windows(cfg), k_pages, v_pages,
+         k_scales, v_scales))
     logits = _logits(params, x[:, -1], cfg, engine)
+    if int8_kv:
+        return logits, nk, nv, nks, nvs
     return logits, nk, nv
 
 
@@ -504,32 +518,39 @@ def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,
 def _decode_step_paged(params: dict, token: Array, cache, cfg: ModelConfig,
                        engine: SalPimEngine):
     """Paged decode: the per-layer KV pools ride through the layer scan;
-    the block table and lengths are shared across layers."""
+    the block table and lengths are shared across layers. int8 pools
+    (cache.k_scale/v_scale present) carry their scale-row pools through
+    the same scan — the append quantizes, the kernel dequantizes."""
     from repro.serving.kvcache import PagedCache
 
     if cfg.family not in ("dense", "moe"):
         raise ValueError(f"paged cache unsupported for family {cfg.family!r}")
-    if cfg.kv_dtype == "int8":
-        raise ValueError("paged cache does not support int8 KV yet")
+    if cache.k_pages.dtype == jnp.int8 and cache.k_scale is None:
+        raise ValueError("int8 page pools need their scale pools: the "
+                         "PagedCache is missing k_scale/v_scale")
 
     x = _embed(params, token[:, None], cfg,
                positions=cache.lengths[:, None] if cfg.learned_pos_emb
                else None)[:, 0]
     cos, sin = _rope(cfg, cache.lengths)
 
+    # One scan body for both pool dtypes (None scale leaves pass through
+    # the scan pytrees), mirroring prefill_chunk.
     def body(h, layer):
-        bp, window, kp, vp = layer
-        h, nk, nv = blk.apply_decoder_block_decode_paged(
+        bp, window, kp, vp, ksc, vsc = layer
+        h, nk, nv, *nsc = blk.apply_decoder_block_decode_paged(
             bp, h, kp, vp, cache.block_tables, cache.lengths, cfg, engine,
-            cos=cos, sin=sin, window=window)
-        return h, (nk, nv)
+            cos=cos, sin=sin, window=window,
+            kv_scales=(ksc, vsc) if ksc is not None else None)
+        return h, (nk, nv, *(nsc or (None, None)))
 
-    x, (nk, nv) = jax.lax.scan(
+    x, (nk, nv, nks, nvs) = jax.lax.scan(
         body, x, (params["blocks"], _windows(cfg), cache.k_pages,
-                  cache.v_pages))
+                  cache.v_pages, cache.k_scale, cache.v_scale))
     new_cache = PagedCache(lengths=_advance_lengths(cache.lengths),
                            block_tables=cache.block_tables,
-                           k_pages=nk, v_pages=nv)
+                           k_pages=nk, v_pages=nv,
+                           k_scale=nks, v_scale=nvs)
     return _logits(params, x, cfg, engine), new_cache
 
 

@@ -162,6 +162,16 @@ class ServingEngine:
     with refcount > 1 first forks it into a private physical page.
     Greedy outputs are bit-identical with sharing on or off and at any
     chunk size — both only remove redundant work and pool pressure.
+
+    `kv_cache_dtype="int8"` (paged mode) stores the page pools as int8
+    with per-(token, head) f32 scale rows: every KV write — chunk
+    prefill and decode append — amax-quantizes at write time and the
+    paged kernels dequantize in VMEM, halving the HBM bytes a decode
+    step streams. With `num_pages=None` the pool keeps the *byte*
+    budget of the fp cache, so it holds ~2x the pages (double resident
+    capacity at fixed HBM). COW forks copy scale rows with their pages.
+    Outputs match the fp engine's greedy outputs up to quantization
+    noise (~1/127 per K/V vector) — exact on the repo's test prompts.
     """
 
     def __init__(self, params: dict, model_cfg: ModelConfig,
@@ -169,7 +179,8 @@ class ServingEngine:
                  gen: GenConfig = GenConfig(), paged: bool = False,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefix_sharing: bool = True,
-                 prefill_chunk_tokens: Optional[int] = None, seed: int = 0):
+                 prefill_chunk_tokens: Optional[int] = None,
+                 kv_cache_dtype: Optional[str] = None, seed: int = 0):
         self.params = params
         self.cfg = model_cfg
         self.engine = engine
@@ -200,20 +211,43 @@ class ServingEngine:
                     "backend prefills whole prompts into per-slot arenas "
                     "and would silently ignore the chunk budget")
         self.prefill_chunk_tokens = prefill_chunk_tokens
+        # KV pool storage: "model" (compute dtype) or "int8" (int8 pages
+        # + f32 scale rows, quantized at write time, dequantized in the
+        # paged kernels). None defers to the model config's kv_dtype.
+        resolved_kv = kv_cache_dtype if kv_cache_dtype is not None \
+            else model_cfg.kv_dtype
+        if resolved_kv not in ("model", "int8"):
+            raise ValueError(f"unknown kv_cache_dtype {resolved_kv!r}")
+        if kv_cache_dtype is not None and not paged \
+                and kv_cache_dtype != model_cfg.kv_dtype:
+            raise ValueError(
+                "kv_cache_dtype selects the paged pool storage; the dense "
+                "backend's arena dtype comes from cfg.kv_dtype")
+        self.kv_cache_dtype = resolved_kv
         if paged:
             self._kv = kv
             if page_size < 1:
                 raise ValueError(f"page_size must be >= 1, got {page_size}")
             max_pages = -(-max_len // page_size)
+            self.page_bytes = kv.page_kv_bytes(model_cfg, page_size,
+                                               resolved_kv)
             if num_pages is None:
-                # Same budget as the dense cache, plus the trash page.
-                num_pages = slots * max_pages + 1
+                # Same *byte* budget as the dense cache (plus the trash
+                # page): int8 pages cost ~half the bytes, so the same
+                # HBM holds ~2x the pages — double the resident-request
+                # capacity at fixed memory, which is the point of the
+                # int8 mode.
+                budget = slots * max_pages * kv.page_kv_bytes(
+                    model_cfg, page_size, "model")
+                num_pages = budget // self.page_bytes + 1
             self.allocator = kv.BlockAllocator(
                 num_pages, page_size, prefix_sharing=prefix_sharing)
             self.cache = model_api.init_paged_cache(
-                model_cfg, slots, num_pages, page_size, max_pages)
+                model_cfg, slots, num_pages, page_size, max_pages,
+                kv_dtype=resolved_kv)
         else:
             self.allocator = None
+            self.page_bytes = None
             self.cache = model_api.init_cache(model_cfg, slots, max_len)
 
         # The cache is donated: decode and chunk-prefill steps update the
@@ -228,11 +262,12 @@ class ServingEngine:
         self._prefill = jax.jit(
             lambda p, toks: model_api.prefill(
                 p, {"tokens": toks}, model_cfg, engine, max_len=max_len))
-        # Paged prefill chunk: writes K/V straight into pool pages.
+        # Paged prefill chunk: writes K/V straight into pool pages (and,
+        # in int8 mode, their scale rows — donated alongside).
         self._prefill_chunk = jax.jit(
-            lambda p, toks, bt, st, kp, vp: model_api.prefill_chunk(
-                p, toks, bt, st, kp, vp, model_cfg, engine),
-            donate_argnums=(4, 5))
+            lambda p, toks, bt, st, kp, vp, ksc, vsc: model_api.prefill_chunk(
+                p, toks, bt, st, kp, vp, model_cfg, engine, ksc, vsc),
+            donate_argnums=(4, 5, 6, 7))
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
         prompt = np.asarray(prompt)
@@ -365,10 +400,15 @@ class ServingEngine:
         row = np.full((self.cache.block_tables.shape[1],), kv.TRASH_PAGE,
                       np.int32)
         row[:len(pages)] = pages
-        logits1, nk, nv = self._prefill_chunk(
+        res = self._prefill_chunk(
             self.params, jnp.asarray(req.prompt[start:end])[None],
             jnp.asarray(row)[None], jnp.asarray([start], jnp.int32),
-            self.cache.k_pages, self.cache.v_pages)
+            self.cache.k_pages, self.cache.v_pages,
+            self.cache.k_scale, self.cache.v_scale)
+        if self.cache.quantized:
+            logits1, nk, nv, nks, nvs = res
+        else:
+            (logits1, nk, nv), nks, nvs = res, None, None
         lengths, tables = self.cache.lengths, self.cache.block_tables
         req.prefill_cursor = end
         self.prefill_tokens += end - start
@@ -379,7 +419,7 @@ class ServingEngine:
             tables = tables.at[slot].set(jnp.asarray(row))
             self.last_logits = self.last_logits.at[slot].set(logits1[0])
             self._host_len[slot] = end
-        self.cache = self._kv.PagedCache(lengths, tables, nk, nv)
+        self.cache = self._kv.PagedCache(lengths, tables, nk, nv, nks, nvs)
         self.peak_pages = max(self.peak_pages, self.allocator.used_pages)
 
     def _release(self, slot: int, req: Request):
@@ -462,6 +502,8 @@ class ServingEngine:
             block_tables=self.cache.block_tables.at[slot, logical].set(page),
             k_pages=self.cache.k_pages,
             v_pages=self.cache.v_pages,
+            k_scale=self.cache.k_scale,
+            v_scale=self.cache.v_scale,
         )
 
     def run(self, max_steps: int = 10000) -> list[Request]:

@@ -50,6 +50,20 @@ Chunked paged prefill:
   chunks. A chunk that would write into a refcount>1 page COW-forks it
   first, exactly like decode appends.
 
+int8 page pools (kv_dtype="int8"):
+
+  Generation is memory-bandwidth-bound — every decode step streams the
+  whole resident KV history — so halving KV bytes per token is worth as
+  much as doubling internal bandwidth. The pool can store K/V as int8
+  with per-(token, head) float32 *scale rows* kept page-indexed beside
+  the payload pools (`k_scale`/`v_scale`, one (page_size,) row per
+  physical page per head per layer). Quantization is symmetric amax at
+  write time (`serving/quantize.quantize_vec`) in both append paths;
+  the paged kernels dequantize in VMEM after the int8 page DMA, so HBM
+  traffic per decode step genuinely drops ~2x (Dh + 4 bytes per vector
+  vs 2*Dh for bf16). COW forks copy the scale rows alongside the pages
+  — a fork must never alias its donor's scales.
+
 The Pallas kernels that read this layout through a scalar-prefetched
 block table are `kernels/paged_attention.py` (decode) and
 `kernels/paged_prefill.py` (chunked prefill).
@@ -64,6 +78,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.quantize import quantize_vec
+
 Array = jax.Array
 
 TRASH_PAGE = 0  # physical page 0: scribble target for unmapped writes
@@ -77,52 +93,104 @@ class PagedCache:
     block_tables: (B, max_pages) int32 physical page per logical page
     k_pages:      (L, P, Hkv, page_size, Dh) shared K pool
     v_pages:      (L, P, Hkv, page_size, Dh) shared V pool
+    k_scale:      (L, P, Hkv, page_size) f32  int8 mode dequant scales
+    v_scale:      (L, P, Hkv, page_size) f32  (None in fp mode)
     """
 
     lengths: Array
     block_tables: Array
     k_pages: Array
     v_pages: Array
+    k_scale: Optional[Array] = None
+    v_scale: Optional[Array] = None
 
     @property
     def page_size(self) -> int:
         return self.k_pages.shape[3]
 
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
 
 jax.tree_util.register_pytree_node(
     PagedCache,
-    lambda c: ((c.lengths, c.block_tables, c.k_pages, c.v_pages), None),
+    lambda c: ((c.lengths, c.block_tables, c.k_pages, c.v_pages,
+                c.k_scale, c.v_scale), None),
     lambda _, ch: PagedCache(*ch),
 )
 
 
+def page_kv_bytes(cfg, page_size: int, kv_dtype: str = "model") -> int:
+    """HBM bytes one physical page costs (K + V, all layers, incl. the
+    int8 mode's scale rows). The allocator hands out pages by *count*;
+    this is the count -> bytes conversion admission byte budgets and the
+    benchmarks use."""
+    unit = cfg.n_layers * cfg.n_kv_heads * page_size
+    if kv_dtype == "int8":
+        return 2 * unit * (cfg.head_dim * 1 + 4)     # payload + f32 scale
+    return 2 * unit * cfg.head_dim * jnp.dtype(cfg.cdtype).itemsize
+
+
 def init_paged_cache(cfg, batch: int, num_pages: int, page_size: int,
-                     max_pages: int, dtype=None) -> PagedCache:
-    """Empty pool + all-trash block tables for `batch` decode slots."""
+                     max_pages: int, dtype=None,
+                     kv_dtype: str = "model") -> PagedCache:
+    """Empty pool + all-trash block tables for `batch` decode slots.
+
+    kv_dtype "model" stores pages in `dtype` (default cfg.cdtype);
+    "int8" stores int8 payload pools plus f32 scale-row pools.
+    """
     dtype = dtype or cfg.cdtype
     L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
     shape = (L, num_pages, Hkv, page_size, Dh)
+    lengths = jnp.zeros((batch,), jnp.int32)
+    tables = jnp.full((batch, max_pages), TRASH_PAGE, jnp.int32)
+    if kv_dtype == "int8":
+        return PagedCache(
+            lengths=lengths,
+            block_tables=tables,
+            k_pages=jnp.zeros(shape, jnp.int8),
+            v_pages=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(shape[:-1], jnp.float32),
+            v_scale=jnp.zeros(shape[:-1], jnp.float32),
+        )
+    if kv_dtype != "model":
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r}")
     return PagedCache(
-        lengths=jnp.zeros((batch,), jnp.int32),
-        block_tables=jnp.full((batch, max_pages), TRASH_PAGE, jnp.int32),
+        lengths=lengths,
+        block_tables=tables,
         k_pages=jnp.zeros(shape, dtype),
         v_pages=jnp.zeros(shape, dtype),
     )
 
 
 def append_kv_pages(k_pages: Array, v_pages: Array, block_tables: Array,
-                    lengths: Array, k_new: Array, v_new: Array
-                    ) -> tuple[Array, Array]:
+                    lengths: Array, k_new: Array, v_new: Array,
+                    k_scale: Array | None = None,
+                    v_scale: Array | None = None):
     """Append one token's K/V at each slot's current length (traced).
 
     k_pages/v_pages: (P, Hkv, page, Dh) one layer's pool;
     k_new/v_new: (B, Hkv, Dh). Slots whose logical page is unmapped hit
     the trash page (block tables default to 0 there).
+
+    With scale pools (k_scale/v_scale (P, Hkv, page), int8 mode) the new
+    vectors are amax-quantized here — at write time — and the int8
+    payload plus its scale land in the same (page, offset); returns
+    (k_pages, v_pages, k_scale, v_scale). Without, returns the 2-tuple.
     """
     page = k_pages.shape[2]
     logical = lengths // page
     phys = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
     off = lengths % page
+    if k_scale is not None:
+        k_q, k_sc = quantize_vec(k_new)
+        v_q, v_sc = quantize_vec(v_new)
+        k_pages = k_pages.at[phys, :, off].set(k_q)
+        v_pages = v_pages.at[phys, :, off].set(v_q)
+        k_scale = k_scale.at[phys, :, off].set(k_sc)
+        v_scale = v_scale.at[phys, :, off].set(v_sc)
+        return k_pages, v_pages, k_scale, v_scale
     k_pages = k_pages.at[phys, :, off].set(k_new.astype(k_pages.dtype))
     v_pages = v_pages.at[phys, :, off].set(v_new.astype(v_pages.dtype))
     return k_pages, v_pages
@@ -134,8 +202,10 @@ def write_prompt_pages(cache: PagedCache, slot: int, page_ids: list[int],
     """Scatter a slot's prefill KV (L, Hkv, S, Dh) into its pages.
 
     `page_ids` are the physical pages the allocator handed this slot;
-    they must cover ceil(length / page_size) logical pages.
+    they must cover ceil(length / page_size) logical pages. fp pools
+    only — int8 prompts quantize through `append_chunk_kv_pages`.
     """
+    assert cache.k_scale is None, "write_prompt_pages is fp-only"
     L, Hkv, S, Dh = k_dense.shape
     bs = cache.page_size
     n0 = len(page_ids)
@@ -163,18 +233,29 @@ def write_prompt_pages(cache: PagedCache, slot: int, page_ids: list[int],
 
 
 def copy_page(cache: PagedCache, src: int, dst: int) -> PagedCache:
-    """COW fork: duplicate physical page `src` into `dst` on every layer."""
+    """COW fork: duplicate physical page `src` into `dst` on every layer.
+
+    int8 mode copies the scale rows with the payload — the fork owns
+    private scales from the first write, so releasing the donor's page
+    (which recycles its scale row) can never corrupt the fork's reads.
+    """
     return PagedCache(
         lengths=cache.lengths,
         block_tables=cache.block_tables,
         k_pages=cache.k_pages.at[:, dst].set(cache.k_pages[:, src]),
         v_pages=cache.v_pages.at[:, dst].set(cache.v_pages[:, src]),
+        k_scale=(None if cache.k_scale is None
+                 else cache.k_scale.at[:, dst].set(cache.k_scale[:, src])),
+        v_scale=(None if cache.v_scale is None
+                 else cache.v_scale.at[:, dst].set(cache.v_scale[:, src])),
     )
 
 
 def append_chunk_kv_pages(k_pages: Array, v_pages: Array,
                           block_tables: Array, start: Array,
-                          k_new: Array, v_new: Array) -> tuple[Array, Array]:
+                          k_new: Array, v_new: Array,
+                          k_scale: Array | None = None,
+                          v_scale: Array | None = None):
     """Write one prefill chunk's K/V at positions start..start+S-1 (traced).
 
     k_pages/v_pages: (P, Hkv, page, Dh) one layer's pool; k_new/v_new:
@@ -183,6 +264,10 @@ def append_chunk_kv_pages(k_pages: Array, v_pages: Array,
     touches must already be mapped (and COW-forked out of any sharing)
     in `block_tables` — rows whose table entries are trash scribble into
     the trash page harmlessly, like `append_kv_pages`.
+
+    With scale pools (int8 mode) the chunk is amax-quantized per
+    (token, head) vector at write time; payload and scales land at the
+    same (page, offset) and the 4-tuple is returned.
     """
     page = k_pages.shape[2]
     S = k_new.shape[1]
@@ -192,6 +277,14 @@ def append_chunk_kv_pages(k_pages: Array, v_pages: Array,
     off = pos % page
     # Advanced indices (B, S) around the Hkv slice: result dims lead, so
     # the update payload is chunk-major (B, S, Hkv, Dh) — no transpose.
+    if k_scale is not None:
+        k_q, k_sc = quantize_vec(k_new)
+        v_q, v_sc = quantize_vec(v_new)
+        k_pages = k_pages.at[phys, :, off].set(k_q)
+        v_pages = v_pages.at[phys, :, off].set(v_q)
+        k_scale = k_scale.at[phys, :, off].set(k_sc)
+        v_scale = v_scale.at[phys, :, off].set(v_sc)
+        return k_pages, v_pages, k_scale, v_scale
     k_pages = k_pages.at[phys, :, off].set(k_new.astype(k_pages.dtype))
     v_pages = v_pages.at[phys, :, off].set(v_new.astype(v_pages.dtype))
     return k_pages, v_pages
@@ -204,6 +297,8 @@ def clear_slot(cache: PagedCache, slot: int) -> PagedCache:
         block_tables=cache.block_tables.at[slot].set(TRASH_PAGE),
         k_pages=cache.k_pages,
         v_pages=cache.v_pages,
+        k_scale=cache.k_scale,
+        v_scale=cache.v_scale,
     )
 
 

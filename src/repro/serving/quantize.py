@@ -1,4 +1,4 @@
-"""Serving-time int8 weight quantization (beyond-paper optimization #2).
+"""Serving-time int8 quantization (beyond-paper optimization #2).
 
 SAL-PIM streams 16-bit fixed-point weights; the TPU-native equivalent of
 squeezing the decode bandwidth bottleneck is int8 weights with per-row
@@ -7,6 +7,14 @@ rewrites every matmul weight leaf into a `QTensor` (same tree position,
 so the sharding rules keep working); `SalPimEngine.linear` consumes
 QTensors with a native s8 dot — the HLO dot operands stay s8, halving the
 per-token weight traffic vs bf16 (and 2x again vs f32).
+
+The same symmetric-amax convention covers the *KV cache* side of the
+bandwidth bill: `quantize_vec` / `dequantize_vec` quantize one K/V vector
+per (token, head) to int8 with a single float scale. The dense int8 KV
+arena (`models/transformer.py`) and the int8 paged page pools
+(`serving/kvcache.py` + the paged Pallas kernels' in-kernel dequant) both
+route through these two functions, so the write-time quantization and
+every read-side dequant — oracle or kernel — agree bit-for-bit.
 """
 from __future__ import annotations
 
@@ -67,6 +75,27 @@ def quantize_params_int8(params: Any) -> Any:
         return leaf
 
     return jax.tree_util.tree_map_with_path(one, params)
+
+
+def quantize_vec(x: Array, scale_dtype=jnp.float32) -> tuple[Array, Array]:
+    """(..., D) -> (int8 payload, (...) scale): symmetric per-vector amax.
+
+    The one KV quantization convention in the repo (same amax/127 form as
+    `quantize_leaf`, per (token, head) vector instead of per weight row).
+    `scale_dtype` trades scale memory for accuracy: the dense int8 KV
+    arena stores bf16 scales, the paged pools keep f32 scale rows.
+    """
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(scale_dtype)
+
+
+def dequantize_vec(q: Array, scale: Array, dtype) -> Array:
+    """Exact inverse read of `quantize_vec`: payload * scale, cast."""
+    return (q.astype(jnp.float32)
+            * scale[..., None].astype(jnp.float32)).astype(dtype)
 
 
 def qtensor_linear(x: Array, q: QTensor, b: Array | None = None) -> Array:
