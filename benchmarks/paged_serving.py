@@ -32,19 +32,28 @@ page count, and at a fixed HBM budget the int8 pool holds ~2x the pages
 (double resident capacity). Mean decode-step wall time is reported for
 both.
 
+Part 5 — speculative decoding: a *repetitive* workload (looping prompts
+whose greedy continuations the n-gram drafter can look up) drained with
+speculation off and on. Greedy outputs must be bit-identical — the
+acceptance rule only commits drafts equal to the target's argmax — and
+under --smoke the spec-on engine must spend < 1 verify pass per
+generated token (the whole point: each pass streams the model once but
+commits 1 + accepted tokens). Acceptance rate, verify passes per token,
+and decode ms/token for both engines go to the JSON artifact.
+
 Reports, per engine: decode steps to drain, wall time (first step
 excluded as compile warmup), generated tokens/sec, KV bytes
 provisioned, prefill tokens, and peak pages. `--json PATH` (default
 bench_smoke.json under --smoke) exports the headline numbers for the
 perf-trajectory record. `--parts` selects which parts run (e.g.
 `--parts 1,2,4` skips the slow jitter study); `--kv-cache-dtype int8`
-serves parts 1-3's paged engines from int8 pools.
+serves parts 1-3 and 5's paged engines from int8 pools.
 
     PYTHONPATH=src python benchmarks/paged_serving.py
     PYTHONPATH=src python benchmarks/paged_serving.py --requests 16 --slots 4
     PYTHONPATH=src python benchmarks/paged_serving.py --requests 4 --smoke
     PYTHONPATH=src python benchmarks/paged_serving.py --smoke \
-        --kv-cache-dtype int8 --parts 1,2,4
+        --kv-cache-dtype int8 --parts 1,2,5
 """
 from __future__ import annotations
 
@@ -59,6 +68,7 @@ from repro.configs import get_config
 from repro.core.salpim import SalPimConfig, SalPimEngine
 from repro.models import api
 from repro.serving.engine import GenConfig, ServingEngine
+from repro.serving.speculative import SpecConfig
 
 
 def _mixed_workload(rng, vocab, n, max_len):
@@ -89,6 +99,23 @@ def _shared_prefix_workload(rng, vocab, n, max_len, prefix_len):
         prompt = np.concatenate([prefix, tail])
         budget = max_len - len(prompt) + 1
         new = int(max(1, min(rng.randint(4, 10), budget)))
+        reqs.append((prompt, new))
+    return reqs
+
+
+def _repetitive_workload(rng, vocab, n, max_len):
+    """Looping prompts: a short random block tiled to ~half of max_len.
+    Greedy decoding falls into local loops on such contexts, which is
+    exactly the structure prompt-lookup (n-gram) drafting predicts —
+    the benchmark's stand-in for extractive / templated serving traffic
+    where speculative decoding earns its keep."""
+    reqs = []
+    for _ in range(n):
+        block = rng.randint(2, vocab, size=rng.randint(2, 5))
+        reps = -(-(max_len // 2) // len(block))
+        prompt = np.tile(block, reps)[:max_len // 2]
+        budget = max_len - len(prompt) + 1
+        new = int(max(4, min(budget, max_len // 2)))
         reqs.append((prompt, new))
     return reqs
 
@@ -278,6 +305,77 @@ def _part4(params, cfg, engine, gen, *, slots, max_len, requests,
             "logit_maxdiff": logit_diff, "logit_tol": logit_tol}
 
 
+def _part5(params, cfg, engine, gen, *, slots, max_len, requests,
+           page_size, seed, max_steps, smoke, spec_k=4,
+           kv_cache_dtype="model"):
+    """Speculative decoding: spec-off vs spec-on (n-gram drafting) on a
+    repetitive workload, same request stream on both engines.
+
+    Asserts greedy outputs bit-identical (always — the acceptance rule
+    only ever commits the target's own argmax choices) and, under
+    --smoke, that the spec-on engine spends < 1 verify round per
+    generated token *with real acceptance behind it*: verify rounds are
+    counted per slot (one full model stream each, the same unit as a
+    decode step), a zero-acceptance run needs exactly tokens - requests
+    rounds (each request's final token is a free argmax), so the assert
+    demands strictly fewer — at least one accepted draft saved a whole
+    model stream. Acceptance rate and decode ms/token for both engines
+    go to the JSON artifact.
+    """
+    rng = np.random.RandomState(seed + 3)
+    reqs = _repetitive_workload(rng, cfg.vocab, requests, max_len)
+    stats = {}
+    outs = {}
+    engines = {}
+    for label, spec in [
+        ("spec-off", None),
+        ("spec-on", SpecConfig(mode="ngram", k=spec_k)),
+    ]:
+        eng = ServingEngine(params, cfg, engine, slots=slots,
+                            max_len=max_len, gen=gen, paged=True,
+                            page_size=page_size, speculative=spec,
+                            kv_cache_dtype=kv_cache_dtype)
+        st = _drain(eng, [(p.copy(), n) for p, n in reqs],
+                    max_steps=max_steps)
+        st["ms_per_token"] = 1e3 / max(st["tok_per_sec"], 1e-9)
+        outs[label] = {r.uid: list(r.generated) for r in eng.finished}
+        stats[label] = st
+        engines[label] = eng
+        es = eng.stats()
+        print(f"{label:>14}: {st['steps']} steps, {st['tokens']} tokens, "
+              f"{st['ms_per_token']:.2f} ms/token, "
+              f"accept {es['accepted']}/{es['proposed']} "
+              f"({es['acceptance_rate']:.0%}), "
+              f"{es['spec_rounds']} verify rounds "
+              f"({es['verify_per_token']:.2f}/token)")
+
+    assert outs["spec-on"] == outs["spec-off"], \
+        "speculative decoding changed greedy outputs"
+    on = engines["spec-on"].stats()
+    vpt = on["verify_per_token"]
+    print(f"speculative decoding: outputs bit-identical, "
+          f"{vpt:.2f} verify rounds per generated token "
+          f"({on['tokens_per_pass']:.2f} tokens/round at "
+          f"{on['acceptance_rate']:.0%} acceptance), decode "
+          f"{stats['spec-off']['ms_per_token']:.2f} -> "
+          f"{stats['spec-on']['ms_per_token']:.2f} ms/token")
+    if smoke:
+        assert vpt < 1.0, (vpt, on)
+        # The teeth: strictly fewer model streams than a zero-acceptance
+        # run would need (tokens - requests: each request's final token
+        # is a free argmax in both engines).
+        no_accept_rounds = on["tokens"] - len(reqs)
+        assert on["spec_rounds"] < no_accept_rounds, (
+            "speculation accepted nothing on the repetitive workload: "
+            f"{on['spec_rounds']} verify rounds for {on['tokens']} tokens "
+            f"({no_accept_rounds} = zero-acceptance cost)")
+    return {"acceptance_rate": on["acceptance_rate"],
+            "verify_per_token": vpt,
+            "tokens_per_pass": on["tokens_per_pass"],
+            "ms_per_token_off": stats["spec-off"]["ms_per_token"],
+            "ms_per_token_on": stats["spec-on"]["ms_per_token"]}
+
+
 def _part3(cfg, engine, gen, *, max_len, page_size, seed, max_steps, smoke,
            kv_cache_dtype="model"):
     """Decode-latency jitter, one-shot ("stall") vs chunked prefill.
@@ -372,7 +470,7 @@ def _part3(cfg, engine, gen, *, max_len, page_size, seed, max_steps, smoke,
 
 def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
         page_size=16, seed=0, max_steps=10_000, smoke=False,
-        json_path=None, kv_cache_dtype="model", parts=(1, 2, 3, 4)):
+        json_path=None, kv_cache_dtype="model", parts=(1, 2, 3, 4, 5)):
     cfg = get_config(arch, smoke=True)
     engine = SalPimEngine.create(SalPimConfig())
     params = api.init_params(jax.random.PRNGKey(0), cfg)
@@ -489,6 +587,20 @@ def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
             "int8_logit_tol": int8["logit_tol"],
         })
 
+    # -- part 5: speculative decoding (draft-verify) ------------------------
+    if 5 in parts:
+        spec = _part5(params, cfg, engine, gen, slots=slots,
+                      max_len=max_len, requests=requests,
+                      page_size=page_size, seed=seed, max_steps=max_steps,
+                      smoke=smoke, kv_cache_dtype=kv_cache_dtype)
+        summary.update({
+            "spec_acceptance_rate": spec["acceptance_rate"],
+            "spec_verify_per_token": spec["verify_per_token"],
+            "spec_tokens_per_pass": spec["tokens_per_pass"],
+            "decode_ms_per_token_spec_off": spec["ms_per_token_off"],
+            "decode_ms_per_token_spec_on": spec["ms_per_token_on"],
+        })
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump(summary, f, indent=2, sort_keys=True)
@@ -514,11 +626,12 @@ def main():
                          "chunked-prefill p99 win and writes --json")
     ap.add_argument("--kv-cache-dtype", default="model",
                     choices=["model", "int8"],
-                    help="KV pool storage for parts 1-3's paged engines "
-                         "(part 4 always compares model vs int8)")
-    ap.add_argument("--parts", default="1,2,3,4",
+                    help="KV pool storage for parts 1-3 and 5's paged "
+                         "engines (part 4 always compares model vs int8)")
+    ap.add_argument("--parts", default="1,2,3,4,5",
                     help="comma-separated parts to run (e.g. 1,2,4 skips "
-                         "the slow decode-jitter study)")
+                         "the slow decode-jitter study and the "
+                         "speculative comparison)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the headline numbers (tokens/s, prefill "
                          "tokens saved, peak pages, inter-token p50/p99, "

@@ -41,6 +41,23 @@ def main():
                          "+ per-(token, head) scale rows (write-time amax "
                          "quantization, in-kernel dequant) — ~2x KV bytes "
                          "saved, ~2x pages at the same HBM budget")
+    ap.add_argument("--kv-scale-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="int8 mode's scale-row storage: bfloat16 halves "
+                         "the scale overhead to (Dh + 2) B per vector")
+    ap.add_argument("--speculative", default="off",
+                    choices=["off", "ngram", "draft-model"],
+                    help="speculative decoding (paged + greedy): a "
+                         "drafter proposes --spec-k tokens, one verify "
+                         "pass scores them all, rejected tails roll back "
+                         "in-pool — greedy outputs are bit-identical, "
+                         "but each verify pass can commit up to k+1 "
+                         "tokens. 'ngram' looks continuations up in the "
+                         "request's own history (model-free); "
+                         "'draft-model' greedy-decodes a 1-layer shrink "
+                         "of the serving model on its own dense cache")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per verify pass")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=10)
@@ -50,6 +67,22 @@ def main():
     engine = SalPimEngine.create(SalPimConfig(nonlinear_mode="lut"))
     params = api.init_params(jax.random.PRNGKey(0), cfg)
 
+    speculative = None
+    if args.speculative != "off":
+        from repro.serving.speculative import SpecConfig
+        if args.speculative == "draft-model":
+            # A 1-layer shrink of the serving model as the cheap draft
+            # (its own params — in production this is a distilled small
+            # model; here it demonstrates the machinery).
+            import dataclasses
+            draft_cfg = dataclasses.replace(cfg, n_layers=1)
+            draft_params = api.init_params(jax.random.PRNGKey(1), draft_cfg)
+            speculative = SpecConfig(mode="draft-model", k=args.spec_k,
+                                     draft_cfg=draft_cfg,
+                                     draft_params=draft_params)
+        else:
+            speculative = SpecConfig(mode="ngram", k=args.spec_k)
+
     eng = ServingEngine(params, cfg, engine, slots=args.slots,
                         max_len=args.max_len,
                         gen=GenConfig(temperature=0.0, stop_on_eos=False),
@@ -57,7 +90,9 @@ def main():
                         num_pages=args.num_pages,
                         prefix_sharing=not args.no_prefix_sharing,
                         prefill_chunk_tokens=args.prefill_chunk_tokens,
-                        kv_cache_dtype=args.kv_cache_dtype)
+                        kv_cache_dtype=args.kv_cache_dtype,
+                        kv_scale_dtype=args.kv_scale_dtype,
+                        speculative=speculative)
     rng = np.random.RandomState(0)
     shared = rng.randint(2, cfg.vocab, size=args.shared_prefix)
     uids = []
@@ -68,6 +103,8 @@ def main():
     mode = (f"paged (page_size={args.page_size}, "
             f"{eng.allocator.num_pages} pages, kv {eng.kv_cache_dtype})"
             if args.paged else "dense")
+    if speculative is not None:
+        mode += f", speculative {args.speculative} k={args.spec_k}"
     print(f"submitted {len(uids)} requests into {args.slots} slots [{mode}]")
 
     t0 = time.perf_counter()
@@ -90,6 +127,13 @@ def main():
               f"peak {eng.peak_pages} pages")
         print(f"prefill: {eng.prefill_tokens} tokens computed, "
               f"{eng.prefill_tokens_saved} skipped via shared prefix pages")
+    if speculative is not None:
+        st = eng.stats()
+        print(f"speculative: {st['accepted']}/{st['proposed']} drafts "
+              f"accepted ({st['acceptance_rate']:.0%}), "
+              f"{st['spec_rounds']} verify rounds for {st['tokens']} "
+              f"tokens ({st['verify_per_token']:.2f} rounds/token, "
+              f"{st['tokens_per_pass']:.2f} tokens/round)")
 
 
 if __name__ == "__main__":

@@ -142,7 +142,10 @@ def pim_paged_prefill_attention(q, k_pages, v_pages, block_tables, length,
                                 impl: str = "reference") -> jax.Array:
     """Chunked prefill attention over a paged KV pool: q (B, Sq, H, D) at
     absolute positions start..start+Sq-1 (see serving/kvcache.py).
-    int8 pools pass scale rows as k_scales/v_scales."""
+    int8 pools pass scale rows as k_scales/v_scales. The speculative
+    verify pass (serving/speculative.py) dispatches through this same
+    entry point: scoring k+1 candidate tokens at decode time *is* a
+    prefill chunk at the slot's current length."""
     if impl == "reference":
         return ref_k.paged_prefill_attention_ref(
             q, k_pages, v_pages, block_tables, length, start,

@@ -69,8 +69,9 @@ def _paged_prefill_kernel(
     q = q_ref[0, 0].astype(jnp.float32)          # (Sq*g, D)
     k = k_ref[0, 0].astype(jnp.float32)          # (page_size, D)
     if quantized:
-        # In-kernel dequant: the page arrived as int8; scale in VMEM.
-        k = k * ksc_ref[0, 0][:, None]           # (page_size,) scale row
+        # In-kernel dequant: the page arrived as int8; the scale row is
+        # DMA'd in its storage dtype (f32 or bf16) and widened in VMEM.
+        k = k * ksc_ref[0, 0].astype(jnp.float32)[:, None]
     # Direction 1: contract head_dim (Q x K^T) — same layout, no transpose.
     scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     if softcap is not None:
@@ -103,7 +104,7 @@ def _paged_prefill_kernel(
     # Direction 2: contract seq (S x V) over the same V page.
     v = v_ref[0, 0].astype(jnp.float32)          # (page_size, D)
     if quantized:
-        v = v * vsc_ref[0, 0][:, None]
+        v = v * vsc_ref[0, 0].astype(jnp.float32)[:, None]
     acc_ref[...] = acc_ref[...] * corr + jnp.dot(
         p, v, preferred_element_type=jnp.float32
     )
@@ -178,9 +179,11 @@ def paged_prefill_attention(
     ]
     inputs = [qg, k_pages, v_pages]
     if quantized:
+        # Scale rows stream in their storage dtype (f32 or bf16) — the
+        # bf16 mode's bandwidth saving depends on NOT widening them
+        # host-side; the kernel widens after the DMA.
         in_specs += [scale_spec, scale_spec]
-        inputs += [k_scales.astype(jnp.float32),
-                   v_scales.astype(jnp.float32)]
+        inputs += [k_scales, v_scales]
     in_specs.append(pl.BlockSpec((TABLE_PAD, 2), lambda b, h, s, *_: (0, 0)))
     inputs.append(wb)
     grid_spec = pltpu.PrefetchScalarGridSpec(

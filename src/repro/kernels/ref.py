@@ -137,26 +137,50 @@ def decode_attention_ref(
     return out.reshape(B, H, D).astype(q.dtype)
 
 
-def quantize_kv_ref(x: Array) -> tuple[Array, Array]:
+def quantize_kv_ref(x: Array, scale_dtype=jnp.float32) -> tuple[Array, Array]:
     """Write-time KV quantization oracle: symmetric per-(…, vector) amax
-    to int8 + f32 scale — exactly `serving/quantize.quantize_vec`, which
-    is what both paged append paths execute on device."""
+    to int8 + scale — exactly `serving/quantize.quantize_vec`, which is
+    what both paged append paths execute on device. `scale_dtype` is the
+    pool's scale-row storage (f32 default; bf16 halves scale bytes)."""
     from repro.serving.quantize import quantize_vec
-    return quantize_vec(x)
+    return quantize_vec(x, scale_dtype=scale_dtype)
 
 
-def kv_roundtrip_ref(x: Array) -> Array:
+def kv_roundtrip_ref(x: Array, scale_dtype=jnp.float32) -> Array:
     """Quantize→dequantize oracle: the int8 pool's view of fp K/V.
 
     Kernel tests bound the int8 paged kernels' error with this: running
     the fp oracle on `kv_roundtrip_ref(k/v)` must match the int8 kernel
     on the quantized pool *elementwise* (same math, same rounding), and
     its distance from the un-quantized fp oracle is the quantization
-    error envelope itself (~1/127 relative per vector).
+    error envelope itself (~1/127 relative per vector with f32 scale
+    rows; bf16 scale rows add the scale's own ~2^-8 rounding on top,
+    still the same elementwise-identity contract vs the kernels).
     """
     from repro.serving.quantize import dequantize_vec
-    q, scale = quantize_kv_ref(x)
+    q, scale = quantize_kv_ref(x, scale_dtype=scale_dtype)
     return dequantize_vec(q, scale, jnp.float32)
+
+
+def greedy_accept_len_ref(drafts: Array, verify_logits: Array) -> int:
+    """Acceptance oracle for the speculative verify pass.
+
+    `verify_logits` (k+1, V) are the target model's logits at every
+    position of one slot's verify chunk [t0, d1..dk] (logits row j =
+    logits *after* chunk token j), `drafts` (<=k,) the drafter's
+    proposals d1.. for that slot. Greedy acceptance keeps the longest
+    prefix of drafts where each d_{j+1} equals the argmax of row j —
+    i.e. exactly the token non-speculative greedy decoding would have
+    emitted there. Tests cross-check the serving engine's in-loop
+    acceptance against this.
+    """
+    import numpy as np
+    drafts = np.asarray(drafts)
+    greedy = np.asarray(jnp.argmax(verify_logits, axis=-1))
+    n = 0
+    while n < len(drafts) and int(drafts[n]) == int(greedy[n]):
+        n += 1
+    return n
 
 
 def _gather_paged_kv(pages: Array, scales: Array | None,
@@ -223,6 +247,14 @@ def paged_prefill_attention_ref(
     window: int | None = None,
 ) -> Array:
     """Oracle for kernels/paged_prefill.py.
+
+    Also the oracle for the speculative *verify* pass: scoring k+1
+    candidate tokens at decode time is the same computation as one
+    prefill chunk at absolute positions start..start+k — causal mask at
+    absolute positions, earlier candidates' KV read back through the
+    block table — so draft verification shares this oracle (and the
+    kernel) wholesale; see `greedy_accept_len_ref` for the acceptance
+    rule applied to its per-position logits.
 
     q: (B, Sq, H, D) — one prompt chunk per sequence, query i at absolute
     position start[b] + i. KV for positions [0, length[b]) is resident in

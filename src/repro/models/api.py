@@ -114,6 +114,26 @@ def prefill_chunk(params: dict, tokens: Array, block_tables: Array,
                             k_scales, v_scales)
 
 
+def verify_tokens(params: dict, tokens: Array, block_tables: Array,
+                  start: Array, k_pages: Array, v_pages: Array,
+                  cfg: ModelConfig, engine: SalPimEngine,
+                  k_scales: Array | None = None,
+                  v_scales: Array | None = None):
+    """Speculative verify pass (dense/moe only): score each slot's k+1
+    candidate tokens [t0, d1..dk] at absolute positions start..start+k
+    in one paged-prefill-shaped forward, returning logits at *all*
+    positions (B, k+1, V) plus the updated pools — the KV of every
+    candidate is written into the slot's pages, and the serving engine
+    rolls rejected tail positions back in-pool. See
+    serving/speculative.py for the draft side and the acceptance rule.
+    """
+    if cfg.family == "encdec":
+        raise ValueError("speculative verify unsupported for encdec")
+    return tf.verify_tokens(params, tokens, block_tables, start,
+                            k_pages, v_pages, cfg, engine,
+                            k_scales, v_scales)
+
+
 def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,
                 engine: SalPimEngine):
     """`cache` may be a dense `Cache` or a `serving.kvcache.PagedCache`;
@@ -125,16 +145,19 @@ def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,
 
 def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
                      page_size: int, max_pages: int,
-                     kv_dtype: str | None = None):
+                     kv_dtype: str | None = None,
+                     kv_scale_dtype: str = "float32"):
     """Paged KV cache (dense/moe families; see serving/kvcache.py).
 
     kv_dtype None defers to cfg.kv_dtype ("model" = compute dtype;
-    "int8" = int8 payload pools + f32 scale-row pools)."""
+    "int8" = int8 payload pools + scale-row pools, whose storage
+    `kv_scale_dtype` is f32 by default or bf16 for (Dh + 2) B/vector)."""
     from repro.serving.kvcache import init_paged_cache as _init
     if cfg.family not in ("dense", "moe"):
         raise ValueError(f"paged cache unsupported for family {cfg.family!r}")
     return _init(cfg, batch, num_pages, page_size, max_pages,
-                 kv_dtype=kv_dtype if kv_dtype is not None else cfg.kv_dtype)
+                 kv_dtype=kv_dtype if kv_dtype is not None else cfg.kv_dtype,
+                 kv_scale_dtype=kv_scale_dtype)
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:

@@ -170,6 +170,13 @@ def attention_prefill_chunk_paged(
     (out, k_pages', v_pages') — there is no dense K/V to scatter later.
     int8 pools (scale rows given) quantize the chunk at write time and
     return (out, k_pages', v_pages', k_scale', v_scale').
+
+    The speculative verify pass reuses this attention wholesale: its
+    chunk is [t0, d1..dk] at the slot's decode frontier, so accepted
+    candidates' KV is already pool-resident when the round commits and
+    rejected tail KV is rolled back by rewinding lengths/tables (the
+    write itself needs no undo — dead positions are length-masked and
+    overwritten by the next append).
     """
     from repro.serving.kvcache import append_chunk_kv_pages
 

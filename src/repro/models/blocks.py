@@ -110,6 +110,9 @@ def apply_decoder_block_prefill_chunk_paged(
     """Prefill block over one prompt chunk against the paged pool: the
     chunk's K/V is written directly into pool pages and its queries read
     all resident KV back through the block table (chunked paged prefill).
+    The speculative verify pass (transformer.verify_tokens) runs this
+    same block on its k+1 candidate tokens — a verify chunk at decode
+    time is indistinguishable from a prompt chunk at this level.
     Returns (x', k_pages', v_pages'[, k_scale', v_scale'] — the scale
     pools ride along in int8-KV mode)."""
     ksc, vsc = kv_scales if kv_scales is not None else (None, None)

@@ -385,6 +385,51 @@ def _hybrid_prefill(params, x, cfg, engine, cos, sin, lengths, max_len):
     return x, cache
 
 
+def _paged_chunk_forward(params: dict, tokens: Array, block_tables: Array,
+                         start: Array, k_pages: Array, v_pages: Array,
+                         cfg: ModelConfig, engine: SalPimEngine,
+                         k_scales: Array | None,
+                         v_scales: Array | None):
+    """Shared body of `prefill_chunk` and `verify_tokens`: run tokens
+    (B, S) at absolute positions start..start+S-1 through the block
+    stack against the page pool, writing each layer's chunk K/V into the
+    mapped pages. Returns (hidden (B, S, D), k', v', k_scale', v_scale')
+    — the two entry points differ only in which positions' logits they
+    project."""
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError("paged prefill unsupported for family "
+                         f"{cfg.family!r}")
+    if k_pages.dtype == jnp.int8 and k_scales is None:
+        # Without this the fp write branch would astype float K/V to
+        # int8 — silent garbage instead of a quantized write.
+        raise ValueError("int8 page pools need their scale pools: pass "
+                         "k_scales/v_scales from the PagedCache")
+    B, S = tokens.shape
+    start = jnp.asarray(start, jnp.int32)
+    pos = start[:, None] + jnp.arange(S)[None, :]            # (B, S)
+    x = _embed(params, tokens, cfg,
+               positions=pos if cfg.learned_pos_emb else None)
+    cos, sin = _rope(cfg, pos)
+    length = start + S
+
+    # One scan body for both pool dtypes: None scale leaves ride through
+    # the scan's xs/ys pytrees untouched (lax.scan slices only array
+    # leaves), so the fp and int8 paths cannot drift apart.
+    def body(h, layer):
+        bp, window, kp, vp, ksc, vsc = layer
+        h, nk, nv, *nsc = blk.apply_decoder_block_prefill_chunk_paged(
+            bp, h, kp, vp, block_tables, start, length, cfg, engine,
+            cos=cos, sin=sin, window=window,
+            kv_scales=(ksc, vsc) if ksc is not None else None)
+        return h, (nk, nv, *(nsc or (None, None)))
+
+    x, (nk, nv, nks, nvs) = jax.lax.scan(
+        _maybe_remat(body, cfg), x,
+        (params["blocks"], _windows(cfg), k_pages, v_pages,
+         k_scales, v_scales))
+    return x, nk, nv, nks, nvs
+
+
 def prefill_chunk(params: dict, tokens: Array, block_tables: Array,
                   start: Array, k_pages: Array, v_pages: Array,
                   cfg: ModelConfig, engine: SalPimEngine,
@@ -408,40 +453,40 @@ def prefill_chunk(params: dict, tokens: Array, block_tables: Array,
     first chunk at the shared offset (the caller COW-forks any shared
     page — payload and scale row — the chunk writes into).
     """
-    if cfg.family not in ("dense", "moe"):
-        raise ValueError("paged prefill unsupported for family "
-                         f"{cfg.family!r}")
-    if k_pages.dtype == jnp.int8 and k_scales is None:
-        # Without this the fp write branch would astype float K/V to
-        # int8 — silent garbage instead of a quantized write.
-        raise ValueError("int8 page pools need their scale pools: pass "
-                         "k_scales/v_scales from the PagedCache")
-    B, S = tokens.shape
-    start = jnp.asarray(start, jnp.int32)
-    pos = start[:, None] + jnp.arange(S)[None, :]            # (B, S)
-    x = _embed(params, tokens, cfg,
-               positions=pos if cfg.learned_pos_emb else None)
-    cos, sin = _rope(cfg, pos)
-    length = start + S
-    int8_kv = k_scales is not None
-
-    # One scan body for both pool dtypes: None scale leaves ride through
-    # the scan's xs/ys pytrees untouched (lax.scan slices only array
-    # leaves), so the fp and int8 paths cannot drift apart.
-    def body(h, layer):
-        bp, window, kp, vp, ksc, vsc = layer
-        h, nk, nv, *nsc = blk.apply_decoder_block_prefill_chunk_paged(
-            bp, h, kp, vp, block_tables, start, length, cfg, engine,
-            cos=cos, sin=sin, window=window,
-            kv_scales=(ksc, vsc) if ksc is not None else None)
-        return h, (nk, nv, *(nsc or (None, None)))
-
-    x, (nk, nv, nks, nvs) = jax.lax.scan(
-        _maybe_remat(body, cfg), x,
-        (params["blocks"], _windows(cfg), k_pages, v_pages,
-         k_scales, v_scales))
+    x, nk, nv, nks, nvs = _paged_chunk_forward(
+        params, tokens, block_tables, start, k_pages, v_pages, cfg,
+        engine, k_scales, v_scales)
     logits = _logits(params, x[:, -1], cfg, engine)
-    if int8_kv:
+    if k_scales is not None:
+        return logits, nk, nv, nks, nvs
+    return logits, nk, nv
+
+
+def verify_tokens(params: dict, tokens: Array, block_tables: Array,
+                  start: Array, k_pages: Array, v_pages: Array,
+                  cfg: ModelConfig, engine: SalPimEngine,
+                  k_scales: Array | None = None,
+                  v_scales: Array | None = None):
+    """Speculative verify pass: score k+1 candidate tokens per slot in
+    one forward over the page pool (serving/speculative.py).
+
+    tokens (B, S=k+1) hold, per decode slot, [t0, d1..dk] — the greedy
+    token plus the drafter's proposals — at absolute positions
+    start[b]..start[b]+k. This is exactly `prefill_chunk`'s computation
+    (same block/attention path, same `append_chunk_kv_pages` write, same
+    paged-prefill kernel dispatch) with one difference: the logits head
+    runs at *all* S positions, because acceptance needs the target's
+    greedy choice after every candidate. Returns (logits (B, S, V),
+    k_pages', v_pages'[, k_scale', v_scale']). The caller commits the
+    longest accepted prefix and rolls the rest back in-pool
+    (`kvcache.rewind_slot` + `BlockAllocator.rewind`) — KV for accepted
+    tokens is already resident, so no decode step re-computes it.
+    """
+    x, nk, nv, nks, nvs = _paged_chunk_forward(
+        params, tokens, block_tables, start, k_pages, v_pages, cfg,
+        engine, k_scales, v_scales)
+    logits = _logits(params, x, cfg, engine)
+    if k_scales is not None:
         return logits, nk, nv, nks, nvs
     return logits, nk, nv
 

@@ -1,1 +1,2 @@
-"""Serving: prefill/decode engine, continuous batching, sampling."""
+"""Serving: prefill/decode engine, continuous batching, paged KV cache,
+speculative draft-verify decoding, sampling."""

@@ -28,8 +28,8 @@ from repro.core.salpim import SalPimEngine
 from repro.models import api as model_api
 from repro.serving import kvcache as kv
 from repro.models.config import ModelConfig
-from repro.models.transformer import Cache
 from repro.serving.sampling import sample
+from repro.serving.speculative import SpecConfig, greedy_accept, make_drafter
 
 Array = jax.Array
 
@@ -122,6 +122,10 @@ class Request:
     # writing its registered pages even after a sharer raises their
     # refcount, since that write *is* the content sharers mapped.
     shared_prompt_tokens: int = 0
+    # Speculative decoding stats: drafts the drafter proposed for this
+    # request and how many the target's verify pass accepted.
+    proposed: int = 0
+    accepted: int = 0
 
     @property
     def prefilling(self) -> bool:
@@ -172,6 +176,16 @@ class ServingEngine:
     capacity at fixed HBM). COW forks copy scale rows with their pages.
     Outputs match the fp engine's greedy outputs up to quantization
     noise (~1/127 per K/V vector) — exact on the repo's test prompts.
+    int8 scale rows default to f32; `kv_scale_dtype="bfloat16"` stores
+    them in bf16 — (Dh + 2) instead of (Dh + 4) bytes per vector.
+
+    `speculative=SpecConfig(...)` (paged + greedy only) turns decode
+    steps into draft-verify rounds (serving/speculative.py): a drafter
+    proposes k tokens, one verify pass scores all of them against the
+    pool, the accepted prefix commits and the rejected tail rolls back
+    in-pool. Greedy outputs stay bit-identical with speculation on or
+    off; mid-prefill slots never speculate (they are not in the decode
+    batch until their prompt cursor finishes).
     """
 
     def __init__(self, params: dict, model_cfg: ModelConfig,
@@ -180,7 +194,9 @@ class ServingEngine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefix_sharing: bool = True,
                  prefill_chunk_tokens: Optional[int] = None,
-                 kv_cache_dtype: Optional[str] = None, seed: int = 0):
+                 kv_cache_dtype: Optional[str] = None,
+                 kv_scale_dtype: str = "float32",
+                 speculative: Optional[SpecConfig] = None, seed: int = 0):
         self.params = params
         self.cfg = model_cfg
         self.engine = engine
@@ -195,10 +211,22 @@ class ServingEngine:
         self._key = jax.random.PRNGKey(seed)
         self._host_len = np.zeros((slots,), np.int64)
         # Serving stats: tokens actually prefilled vs skipped via shared
-        # prefix pages, and the page pool's high-water mark.
+        # prefix pages, the page pool's high-water mark, speculative
+        # draft/accept counters, and step wall time (stats()).
         self.prefill_tokens = 0
         self.prefill_tokens_saved = 0
         self.peak_pages = 0
+        self.spec_proposed = 0
+        self.spec_accepted = 0
+        # verify_passes counts verify *program launches* (one per engine
+        # step with survivors, shared by every slot in the batch);
+        # spec_rounds counts slot-level verify rounds — the number of
+        # full model streams speculative work cost, the honest unit for
+        # "verify passes per generated token" (a plain decode step costs
+        # one stream per slot-round too).
+        self.verify_passes = 0
+        self.spec_rounds = 0
+        self._step_sec = 0.0
 
         self.paged = paged
         if prefill_chunk_tokens is not None:
@@ -224,13 +252,32 @@ class ServingEngine:
                 "kv_cache_dtype selects the paged pool storage; the dense "
                 "backend's arena dtype comes from cfg.kv_dtype")
         self.kv_cache_dtype = resolved_kv
+        if kv_scale_dtype != "float32" and resolved_kv != "int8":
+            raise ValueError(
+                "kv_scale_dtype selects the int8 pools' scale-row "
+                "storage; fp pools have no scale rows")
+        self.kv_scale_dtype = kv_scale_dtype
+        self.spec = speculative
+        if speculative is not None:
+            speculative.validate()
+            if not paged:
+                raise ValueError(
+                    "speculative decoding requires paged=True: rollback "
+                    "is in-pool (rewind lengths + unmap tail pages)")
+            if gen.temperature > 0.0:
+                raise ValueError(
+                    "speculative decoding is greedy-only: acceptance "
+                    "compares drafts against argmax, which is exact "
+                    "only at temperature 0")
+        self.drafter = (make_drafter(speculative, engine, max_len)
+                        if speculative is not None else None)
         if paged:
             self._kv = kv
             if page_size < 1:
                 raise ValueError(f"page_size must be >= 1, got {page_size}")
             max_pages = -(-max_len // page_size)
             self.page_bytes = kv.page_kv_bytes(model_cfg, page_size,
-                                               resolved_kv)
+                                               resolved_kv, kv_scale_dtype)
             if num_pages is None:
                 # Same *byte* budget as the dense cache (plus the trash
                 # page): int8 pages cost ~half the bytes, so the same
@@ -244,7 +291,7 @@ class ServingEngine:
                 num_pages, page_size, prefix_sharing=prefix_sharing)
             self.cache = model_api.init_paged_cache(
                 model_cfg, slots, num_pages, page_size, max_pages,
-                kv_dtype=resolved_kv)
+                kv_dtype=resolved_kv, kv_scale_dtype=kv_scale_dtype)
         else:
             self.allocator = None
             self.page_bytes = None
@@ -258,14 +305,39 @@ class ServingEngine:
             lambda p, tok, cache: model_api.decode_step(
                 p, tok, cache, model_cfg, engine),
             donate_argnums=(2,))
-        # Per-slot dense prefill (batch of 1) — compiled once per length.
-        self._prefill = jax.jit(
-            lambda p, toks: model_api.prefill(
-                p, {"tokens": toks}, model_cfg, engine, max_len=max_len))
+
+        # Per-slot dense admission (batch-of-1 prefill + slot scatter) —
+        # compiled once per prompt length. The engine-wide cache and
+        # last_logits are donated, so admitting a request updates the
+        # dense arena in place like the paged decode/chunk jits instead
+        # of copying every slot's KV to write one slot's rows.
+        def _dense_admit_fn(p, toks, slot, cache, last_logits):
+            logits1, cache1 = model_api.prefill(
+                p, {"tokens": toks}, model_cfg, engine, max_len=max_len)
+
+            def put(dst, src):
+                if dst is None:
+                    return None
+                if dst.ndim == 1:  # lengths
+                    return dst.at[slot].set(src[0])
+                return dst.at[:, slot].set(src[:, 0])
+
+            cache = jax.tree.map(put, cache, cache1,
+                                 is_leaf=lambda x: x is None)
+            return cache, last_logits.at[slot].set(logits1[0])
+
+        self._dense_admit = jax.jit(_dense_admit_fn, donate_argnums=(3, 4))
         # Paged prefill chunk: writes K/V straight into pool pages (and,
         # in int8 mode, their scale rows — donated alongside).
         self._prefill_chunk = jax.jit(
             lambda p, toks, bt, st, kp, vp, ksc, vsc: model_api.prefill_chunk(
+                p, toks, bt, st, kp, vp, model_cfg, engine, ksc, vsc),
+            donate_argnums=(4, 5, 6, 7))
+        # Speculative verify pass: score each slot's k+1 candidate
+        # tokens in one prefill-chunk-shaped forward returning logits at
+        # every position; pools donated exactly like _prefill_chunk.
+        self._verify = jax.jit(
+            lambda p, toks, bt, st, kp, vp, ksc, vsc: model_api.verify_tokens(
                 p, toks, bt, st, kp, vp, model_cfg, engine, ksc, vsc),
             donate_argnums=(4, 5, 6, 7))
 
@@ -298,17 +370,6 @@ class ServingEngine:
         self._uid += 1
         self.queue.append(Request(self._uid, prompt, max_new_tokens))
         return self._uid
-
-    def _write_slot(self, slot: int, cache1: Cache, logits1: Array):
-        def put(dst, src):
-            if dst is None:
-                return None
-            if dst.ndim == 1:  # lengths
-                return dst.at[slot].set(src[0])
-            return dst.at[:, slot].set(src[:, 0])
-        self.cache = jax.tree.map(put, self.cache, cache1,
-                                  is_leaf=lambda x: x is None)
-        self.last_logits = self.last_logits.at[slot].set(logits1[0])
 
     def _admit(self):
         for slot in range(self.slots):
@@ -350,9 +411,9 @@ class ServingEngine:
                     self.prefill_tokens_saved += req.prefill_cursor
                     self._host_len[slot] = 0
                 else:
-                    logits1, cache1 = self._prefill(
-                        self.params, jnp.asarray(req.prompt[None]))
-                    self._write_slot(slot, cache1, logits1)
+                    self.cache, self.last_logits = self._dense_admit(
+                        self.params, jnp.asarray(req.prompt[None]),
+                        jnp.int32(slot), self.cache, self.last_logits)
                     self.prefill_tokens += len(req.prompt)
                     req.prefill_cursor = len(req.prompt)
                     self._host_len[slot] = len(req.prompt)
@@ -434,12 +495,42 @@ class ServingEngine:
             # it (idle lengths otherwise creep and the slot burns
             # attention/append work on garbage every step).
             self.cache.lengths = self.cache.lengths.at[slot].set(0)
+        if self.drafter is not None:
+            self.drafter.release(slot)
         self._host_len[slot] = 0
+
+    def _map_write_range(self, slot: int, req: Request, first: int,
+                         n_writes: int):
+        """Map/fork pages so KV writes at positions first..first+n-1 land
+        in private physical pages: extend where the position falls off
+        the mapped pages (reservations make this infallible), COW-fork
+        any still-shared page a write would touch."""
+        ps = self.allocator.page_size
+        for pos in range(first, first + n_writes):
+            if self.allocator.needs_extend(req.uid, pos):
+                page = self.allocator.extend(req.uid)
+                n_mapped = len(self.allocator.pages_of(req.uid))
+                self._repoint(slot, n_mapped - 1, page)
+            else:
+                logical = pos // ps
+                page = self.allocator.pages_of(req.uid)[logical]
+                if self.allocator.refcount(page) > 1:
+                    old, new = self.allocator.fork_page(req.uid, logical)
+                    self.cache = self._kv.copy_page(self.cache, old, new)
+                    self._repoint(slot, logical, new)
 
     def step(self) -> int:
         """One engine step: admit, run at most one prompt chunk, then one
-        decode step across all fully-prefilled slots. Returns the amount
-        of outstanding work (live decodes + mid-prefill slots + queue)."""
+        decode step (or, with `speculative`, one draft-verify round)
+        across all fully-prefilled slots. Returns the amount of
+        outstanding work (live decodes + mid-prefill slots + queue)."""
+        t_start = time.perf_counter()
+        try:
+            return self._step_inner()
+        finally:
+            self._step_sec += time.perf_counter() - t_start
+
+    def _step_inner(self) -> int:
         self._admit()
         if self.paged:
             self._prefill_tick()
@@ -449,6 +540,8 @@ class ServingEngine:
                  if r is not None and not r.prefilling]
         if not ready:
             return n_prefilling + len(self.queue)
+        if self.spec is not None:
+            return self._spec_round(ready) + n_prefilling + len(self.queue)
         self._key, step_key = jax.random.split(self._key)
         toks = sample(self.last_logits, step_key,
                       temperature=self.gen.temperature, top_k=self.gen.top_k)
@@ -475,18 +568,7 @@ class ServingEngine:
                 req = self.active[i]
                 if req is None or req.prefilling:
                     continue
-                pos = int(self._host_len[i])
-                if self.allocator.needs_extend(req.uid, pos):
-                    page = self.allocator.extend(req.uid)
-                    n_mapped = len(self.allocator.pages_of(req.uid))
-                    self._repoint(i, n_mapped - 1, page)
-                else:
-                    logical = pos // self.allocator.page_size
-                    page = self.allocator.pages_of(req.uid)[logical]
-                    if self.allocator.refcount(page) > 1:
-                        old, new = self.allocator.fork_page(req.uid, logical)
-                        self.cache = self._kv.copy_page(self.cache, old, new)
-                        self._repoint(i, logical, new)
+                self._map_write_range(i, req, int(self._host_len[i]), 1)
             self.peak_pages = max(self.peak_pages,
                                   self.allocator.used_pages)
         self.last_logits, self.cache = self._decode(
@@ -495,6 +577,126 @@ class ServingEngine:
         # (decode_step freezes zero-length slots on device too).
         self._host_len += mask
         return int(mask.sum()) + n_prefilling + len(self.queue)
+
+    def _spec_round(self, ready: list[int]) -> int:
+        """One draft-verify round over the fully-prefilled slots.
+
+        t0 (the greedy token from last_logits) is free — no model call —
+        exactly as in a plain step. Continuing slots then get up to
+        spec.k drafted continuations, every candidate's KV is written
+        into the slot's pages by ONE verify forward returning logits at
+        all k+1 positions, and greedy acceptance commits the longest
+        matching draft prefix. The rejected tail rolls back in-pool:
+        host/device lengths rewind and now-empty tail pages return to
+        the free list *and the slot's reservation* (watermark math
+        unchanged). Emits 1..k+1 tokens per live slot per round, so
+        verify passes per generated token is <= 1 by construction.
+
+        Bit-identicality with speculation off: t0 is the same argmax;
+        the verify logits at each accepted position are the same
+        computation a decode step would have run there (same resident
+        KV, same position, same kernel family — the chunked-prefill
+        equivalence the repo already holds); and a draft is accepted
+        only when it *equals* the argmax at its position. Rejected
+        drafts never influence committed state: their KV is length-
+        masked away and rewound before any later read.
+        """
+        k = self.spec.k
+        # Greedy t0 per ready slot (speculative mode is greedy-only, so
+        # no PRNG key is consumed — matching the spec-off greedy path,
+        # where sample() ignores its key at temperature 0).
+        host_logits = np.asarray(self.last_logits)
+        survivors: list[tuple[int, Request, int, np.ndarray]] = []
+        for i in ready:
+            req = self.active[i]
+            t0 = int(np.argmax(host_logits[i]))
+            req.generated.append(t0)
+            if (len(req.generated) >= req.max_new_tokens
+                    or (self.gen.stop_on_eos and t0 == self.gen.eos_id)):
+                self._release(i, req)
+                continue
+            # KV positions this request may still occupy are bounded by
+            # the watermark reservation (prompt + max_new - 1): with G
+            # tokens generated and KV resident through position L-1
+            # (L = prompt + G - 1 before t0's write), at most
+            # max_new - G - 1 draft writes fit after t0's. Slots out of
+            # draft room still verify — a 1-token verify row is exactly
+            # a decode step run through the verify program.
+            room = req.max_new_tokens - len(req.generated) - 1
+            k_i = min(k, room)
+            context = np.concatenate(
+                [req.prompt, np.asarray(req.generated, np.int64)])
+            drafts = (np.asarray(self.drafter.propose(i, context, k_i))
+                      if k_i > 0 else np.zeros((0,), np.int64))
+            drafts = drafts[:k_i]
+            req.proposed += len(drafts)
+            self.spec_proposed += len(drafts)
+            survivors.append((i, req, t0, drafts))
+        if not survivors:
+            return 0
+        # Build the (slots, k+1) verify batch. Slots outside `survivors`
+        # (empty, mid-prefill, or just released) keep all-trash block
+        # table rows, so their padded rows scribble into the trash page
+        # and their logits are ignored.
+        tokens = np.zeros((self.slots, k + 1), np.int32)
+        starts = np.zeros((self.slots,), np.int32)
+        for i, req, t0, drafts in survivors:
+            L = int(self._host_len[i])
+            tokens[i, 0] = t0
+            tokens[i, 1:1 + len(drafts)] = drafts
+            starts[i] = L
+            # Map pages for every candidate write (t0 + drafts); padded
+            # positions past the drafts either land in the tail of an
+            # already-mapped page (dead data past the rewind length) or
+            # fall off mapped pages into the trash page.
+            self._map_write_range(i, req, L, 1 + len(drafts))
+        self.peak_pages = max(self.peak_pages, self.allocator.used_pages)
+        res = self._verify(
+            self.params, jnp.asarray(tokens), self.cache.block_tables,
+            jnp.asarray(starts), self.cache.k_pages, self.cache.v_pages,
+            self.cache.k_scale, self.cache.v_scale)
+        if self.cache.quantized:
+            vlogits, nk, nv, nks, nvs = res
+        else:
+            (vlogits, nk, nv), nks, nvs = res, None, None
+        self.cache = self._kv.PagedCache(
+            self.cache.lengths, self.cache.block_tables, nk, nv, nks, nvs)
+        self.verify_passes += 1
+        self.spec_rounds += len(survivors)
+        # Acceptance needs only the argmaxes: reduce on device and move
+        # a (slots, k+1) int array to host instead of the full logits.
+        greedy = np.asarray(jnp.argmax(vlogits, axis=-1))
+        live = 0
+        updates: list[tuple[int, int]] = []          # (slot, accepted)
+        for i, req, t0, drafts in survivors:
+            a, hit_eos = greedy_accept(
+                drafts, greedy[i], eos_id=self.gen.eos_id,
+                stop_on_eos=self.gen.stop_on_eos)
+            for tok in drafts[:a]:
+                req.generated.append(int(tok))
+            req.accepted += a
+            self.spec_accepted += a
+            new_len = int(starts[i]) + 1 + a
+            if hit_eos:
+                self._release(i, req)
+                continue
+            # In-pool rollback of the rejected tail: host/device lengths
+            # rewind to the accepted frontier and tail pages that are
+            # now empty return to the free list + reservation.
+            self.allocator.rewind(req.uid, new_len)
+            keep = len(self.allocator.pages_of(req.uid))
+            self.cache = self._kv.rewind_slot(self.cache, i, new_len, keep)
+            self._host_len[i] = new_len
+            updates.append((i, a))
+            live += 1
+        if updates:
+            # One scatter: each live slot's next-round logits are the
+            # verify logits after its last accepted token.
+            rows = jnp.asarray([i for i, _ in updates])
+            cols = jnp.asarray([a for _, a in updates])
+            self.last_logits = self.last_logits.at[rows].set(
+                vlogits[rows, cols])
+        return live
 
     def _repoint(self, slot: int, logical: int, page: int):
         self.cache = self._kv.PagedCache(
@@ -515,3 +717,39 @@ class ServingEngine:
             if n == 0 and not self.queue and all(a is None for a in self.active):
                 break
         return self.finished[start:]
+
+    def stats(self) -> dict:
+        """Aggregate serving stats over everything this engine has run.
+
+        tokens / tokens_budget / sec_per_token mirror `generate()`'s
+        accounting (tokens = emitted, budget = sum of request budgets,
+        sec_per_token = total step wall time over emitted tokens);
+        proposed / accepted / acceptance_rate / verify_passes /
+        spec_rounds describe the speculative rounds (proposed and
+        accepted sum the per-request counters exactly).
+        verify_per_token = slot-level verify rounds per emitted token —
+        the model-streams-per-token cost (a non-speculative engine pays
+        exactly one decode stream per slot-round, so < 1 here means
+        speculation genuinely amortized the memory-bound stream);
+        tokens_per_pass = its inverse, 1 + the average accepted drafts
+        per round. With speculation off every speculative field is 0.
+        """
+        reqs = self.finished + [r for r in self.active if r is not None]
+        tokens = sum(len(r.generated) for r in reqs)
+        spec_tokens = tokens if self.spec is not None else 0
+        return {
+            "tokens": tokens,
+            "tokens_budget": sum(r.max_new_tokens for r in reqs),
+            "sec_per_token": self._step_sec / max(tokens, 1),
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
+            "peak_pages": self.peak_pages,
+            "proposed": self.spec_proposed,
+            "accepted": self.spec_accepted,
+            "acceptance_rate": self.spec_accepted / max(self.spec_proposed,
+                                                        1),
+            "verify_passes": self.verify_passes,
+            "spec_rounds": self.spec_rounds,
+            "verify_per_token": self.spec_rounds / max(spec_tokens, 1),
+            "tokens_per_pass": spec_tokens / max(self.spec_rounds, 1),
+        }

@@ -55,14 +55,31 @@ int8 page pools (kv_dtype="int8"):
   Generation is memory-bandwidth-bound — every decode step streams the
   whole resident KV history — so halving KV bytes per token is worth as
   much as doubling internal bandwidth. The pool can store K/V as int8
-  with per-(token, head) float32 *scale rows* kept page-indexed beside
-  the payload pools (`k_scale`/`v_scale`, one (page_size,) row per
-  physical page per head per layer). Quantization is symmetric amax at
-  write time (`serving/quantize.quantize_vec`) in both append paths;
-  the paged kernels dequantize in VMEM after the int8 page DMA, so HBM
+  with per-(token, head) *scale rows* kept page-indexed beside the
+  payload pools (`k_scale`/`v_scale`, one (page_size,) row per physical
+  page per head per layer). Quantization is symmetric amax at write
+  time (`serving/quantize.quantize_vec`) in both append paths; the
+  paged kernels dequantize in VMEM after the int8 page DMA, so HBM
   traffic per decode step genuinely drops ~2x (Dh + 4 bytes per vector
-  vs 2*Dh for bf16). COW forks copy the scale rows alongside the pages
-  — a fork must never alias its donor's scales.
+  vs 2*Dh for bf16). `kv_scale_dtype="bfloat16"` stores the scale rows
+  in bf16 — (Dh + 2) bytes per vector — trading ~3 bits of scale
+  mantissa for another ~3% of bandwidth. COW forks copy the scale rows
+  alongside the pages — a fork must never alias its donor's scales.
+
+Speculative rollback (draft-verify serving):
+
+  The speculative decoding subsystem (`serving/speculative.py`) writes
+  k+1 candidate tokens' KV into a slot's pages in one verify pass, then
+  keeps only the accepted prefix. Rollback is *in-pool*: `rewind_slot`
+  rewinds the slot's device length and re-trashes table entries past
+  the kept pages, and `BlockAllocator.rewind` returns now-empty tail
+  pages to the free list *and the sequence's reservation* (the exact
+  inverse of `extend`, so watermark math is unchanged). This is safe
+  because decode-generated pages are never shared: only full *prompt*
+  pages enter the prefix cache, so a rewound page always has
+  refcount 1 (asserted). Data past the rewound length inside a kept
+  page is dead — reads are length-masked and decode appends overwrite
+  it (and, in int8 mode, its scale-row entries) position by position.
 
 The Pallas kernels that read this layout through a scalar-prefetched
 block table are `kernels/paged_attention.py` (decode) and
@@ -93,8 +110,8 @@ class PagedCache:
     block_tables: (B, max_pages) int32 physical page per logical page
     k_pages:      (L, P, Hkv, page_size, Dh) shared K pool
     v_pages:      (L, P, Hkv, page_size, Dh) shared V pool
-    k_scale:      (L, P, Hkv, page_size) f32  int8 mode dequant scales
-    v_scale:      (L, P, Hkv, page_size) f32  (None in fp mode)
+    k_scale:      (L, P, Hkv, page_size) int8 mode dequant scales
+    v_scale:      (L, P, Hkv, page_size) (f32 or bf16; None in fp mode)
     """
 
     lengths: Array
@@ -121,38 +138,50 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def page_kv_bytes(cfg, page_size: int, kv_dtype: str = "model") -> int:
+_SCALE_DTYPES = ("float32", "bfloat16")
+
+
+def page_kv_bytes(cfg, page_size: int, kv_dtype: str = "model",
+                  kv_scale_dtype: str = "float32") -> int:
     """HBM bytes one physical page costs (K + V, all layers, incl. the
     int8 mode's scale rows). The allocator hands out pages by *count*;
     this is the count -> bytes conversion admission byte budgets and the
     benchmarks use."""
     unit = cfg.n_layers * cfg.n_kv_heads * page_size
     if kv_dtype == "int8":
-        return 2 * unit * (cfg.head_dim * 1 + 4)     # payload + f32 scale
+        # payload + one scale per (token, head) vector: 4 B in f32,
+        # 2 B with kv_scale_dtype="bfloat16".
+        sc = jnp.dtype(kv_scale_dtype).itemsize
+        return 2 * unit * (cfg.head_dim * 1 + sc)
     return 2 * unit * cfg.head_dim * jnp.dtype(cfg.cdtype).itemsize
 
 
 def init_paged_cache(cfg, batch: int, num_pages: int, page_size: int,
-                     max_pages: int, dtype=None,
-                     kv_dtype: str = "model") -> PagedCache:
+                     max_pages: int, dtype=None, kv_dtype: str = "model",
+                     kv_scale_dtype: str = "float32") -> PagedCache:
     """Empty pool + all-trash block tables for `batch` decode slots.
 
     kv_dtype "model" stores pages in `dtype` (default cfg.cdtype);
-    "int8" stores int8 payload pools plus f32 scale-row pools.
+    "int8" stores int8 payload pools plus scale-row pools in
+    `kv_scale_dtype` ("float32" default; "bfloat16" halves the scale
+    overhead to (Dh + 2) B/vector).
     """
     dtype = dtype or cfg.cdtype
     L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
     shape = (L, num_pages, Hkv, page_size, Dh)
     lengths = jnp.zeros((batch,), jnp.int32)
     tables = jnp.full((batch, max_pages), TRASH_PAGE, jnp.int32)
+    if kv_scale_dtype not in _SCALE_DTYPES:
+        raise ValueError(f"unknown kv_scale_dtype {kv_scale_dtype!r}")
     if kv_dtype == "int8":
+        sdt = jnp.dtype(kv_scale_dtype)
         return PagedCache(
             lengths=lengths,
             block_tables=tables,
             k_pages=jnp.zeros(shape, jnp.int8),
             v_pages=jnp.zeros(shape, jnp.int8),
-            k_scale=jnp.zeros(shape[:-1], jnp.float32),
-            v_scale=jnp.zeros(shape[:-1], jnp.float32),
+            k_scale=jnp.zeros(shape[:-1], sdt),
+            v_scale=jnp.zeros(shape[:-1], sdt),
         )
     if kv_dtype != "model":
         raise ValueError(f"unknown kv_dtype {kv_dtype!r}")
@@ -184,8 +213,8 @@ def append_kv_pages(k_pages: Array, v_pages: Array, block_tables: Array,
     phys = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
     off = lengths % page
     if k_scale is not None:
-        k_q, k_sc = quantize_vec(k_new)
-        v_q, v_sc = quantize_vec(v_new)
+        k_q, k_sc = quantize_vec(k_new, scale_dtype=k_scale.dtype)
+        v_q, v_sc = quantize_vec(v_new, scale_dtype=v_scale.dtype)
         k_pages = k_pages.at[phys, :, off].set(k_q)
         v_pages = v_pages.at[phys, :, off].set(v_q)
         k_scale = k_scale.at[phys, :, off].set(k_sc)
@@ -278,8 +307,8 @@ def append_chunk_kv_pages(k_pages: Array, v_pages: Array,
     # Advanced indices (B, S) around the Hkv slice: result dims lead, so
     # the update payload is chunk-major (B, S, Hkv, Dh) — no transpose.
     if k_scale is not None:
-        k_q, k_sc = quantize_vec(k_new)
-        v_q, v_sc = quantize_vec(v_new)
+        k_q, k_sc = quantize_vec(k_new, scale_dtype=k_scale.dtype)
+        v_q, v_sc = quantize_vec(v_new, scale_dtype=v_scale.dtype)
         k_pages = k_pages.at[phys, :, off].set(k_q)
         v_pages = v_pages.at[phys, :, off].set(v_q)
         k_scale = k_scale.at[phys, :, off].set(k_sc)
@@ -295,6 +324,29 @@ def clear_slot(cache: PagedCache, slot: int) -> PagedCache:
     return PagedCache(
         lengths=cache.lengths.at[slot].set(0),
         block_tables=cache.block_tables.at[slot].set(TRASH_PAGE),
+        k_pages=cache.k_pages,
+        v_pages=cache.v_pages,
+        k_scale=cache.k_scale,
+        v_scale=cache.v_scale,
+    )
+
+
+def rewind_slot(cache: PagedCache, slot: int, new_len: int,
+                keep_pages: int) -> PagedCache:
+    """Roll back a slot after speculative rejection: device length back
+    to `new_len`, table entries past the first `keep_pages` re-trashed
+    (the allocator freed those physical pages via `rewind`). The pools
+    are untouched — rejected K/V (and, in int8 mode, its scale-row
+    entries) past `new_len` inside a kept page is dead data: reads are
+    length-masked and the next appends at positions new_len.. overwrite
+    payload and scales alike, so the kept prefix's scale rows survive
+    rollback bit-for-bit."""
+    n = cache.block_tables.shape[1]
+    keep = jnp.arange(n) < keep_pages
+    row = jnp.where(keep, cache.block_tables[slot], TRASH_PAGE)
+    return PagedCache(
+        lengths=cache.lengths.at[slot].set(new_len),
+        block_tables=cache.block_tables.at[slot].set(row),
         k_pages=cache.k_pages,
         v_pages=cache.v_pages,
         k_scale=cache.k_scale,
@@ -509,6 +561,33 @@ class BlockAllocator:
         self._decref(old)
         pages[logical_idx] = new
         return old, new
+
+    def rewind(self, uid: int, n_tokens: int) -> list[int]:
+        """Speculative rollback: unmap uid's pages past those needed to
+        hold `n_tokens`, returning each to the free list *and* to uid's
+        reservation — the exact inverse of `extend`, so the watermark
+        (`available_pages`) is unchanged by a draft-verify round
+        regardless of how many drafts were rejected.
+
+        Only decode-frontier pages are ever rewound, and those are never
+        shared (the prefix cache registers full *prompt* pages only) nor
+        registered — both asserted, because rewinding a shared or cached
+        page would free KV another sequence still reads. Returns the
+        dropped physical pages (for tests; the caller re-trashes the
+        device block-table row via `rewind_slot`)."""
+        pages = self._pages[uid]
+        keep = self.pages_for(n_tokens)
+        dropped: list[int] = []
+        while len(pages) > keep:
+            p = pages.pop()
+            assert self._ref[p] == 1, f"rewind of shared page {p}"
+            assert p not in self._page_key, f"rewind of cached page {p}"
+            del self._ref[p]
+            self._free.append(p)
+            self._owned[uid] -= 1
+            self._reserved += 1
+            dropped.append(p)
+        return dropped
 
     def release(self, uid: int) -> None:
         pages = self._pages.pop(uid)

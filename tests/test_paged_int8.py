@@ -397,3 +397,147 @@ def test_int8_fork_survives_donor_release_and_page_reuse():
         solo[u] = r2.generated
     assert by[u_donor] == solo[u_donor]
     assert by[u_fork] == solo[u_fork]
+
+
+# ---------------------------------------------------------------------------
+# bf16 scale rows: (Dh + 2) B/vector instead of (Dh + 4)
+# ---------------------------------------------------------------------------
+
+def test_quantize_vec_bf16_scale_roundtrip_bound():
+    """bf16 scale storage adds the scale's own rounding (<= 2^-9
+    relative, so <= 127 * 2^-9 ~ 0.25 steps on the largest payload) to
+    the half-step quantization error — still bounded per vector."""
+    x = jax.random.normal(KEY, (4, 3, 32)) * 2.0
+    q, scale = quantize_vec(x, scale_dtype=jnp.bfloat16)
+    assert scale.dtype == jnp.bfloat16
+    deq = dequantize_vec(q, scale, jnp.float32)
+    step = np.asarray(jnp.max(jnp.abs(x), -1) / 127.0)
+    bound = step * (0.5 + 127 * 2.0**-9) + 1e-6
+    err = np.asarray(jnp.max(jnp.abs(deq - x), -1))
+    assert (err <= bound).all(), (err.max(), bound.max())
+
+
+def test_bf16_scale_ref_equals_fp_ref_on_bf16_roundtrip():
+    """The bf16-scale oracle is exactly the fp oracle on the
+    bf16-roundtripped pools — same elementwise-identity contract the
+    f32 scale rows are held to, with scale rounding inside the
+    envelope, not a second approximation."""
+    ks = jax.random.split(KEY, 3)
+    B, H, Hkv, D, page, npg = 2, 4, 2, 16, 8, 4
+    P = 1 + B * npg
+    rng = np.random.RandomState(0)
+    tbl = jnp.asarray(
+        rng.permutation(np.arange(1, P)).reshape(B, npg).astype(np.int32))
+    kp = jax.random.normal(ks[0], (P, Hkv, page, D), jnp.float32)
+    vp = jax.random.normal(ks[1], (P, Hkv, page, D), jnp.float32)
+    q = jax.random.normal(ks[2], (B, H, D), jnp.float32)
+    kq, ksc = quantize_vec(kp, scale_dtype=jnp.bfloat16)
+    vq, vsc = quantize_vec(vp, scale_dtype=jnp.bfloat16)
+    lens = jnp.asarray([9, 26], jnp.int32)
+    got = ref_k.paged_attention_ref(q, kq, vq, tbl, lens, ksc, vsc)
+    want = ref_k.paged_attention_ref(
+        q, ref_k.kv_roundtrip_ref(kp, scale_dtype=jnp.bfloat16),
+        ref_k.kv_roundtrip_ref(vp, scale_dtype=jnp.bfloat16), tbl, lens)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("entry", ["decode", "prefill"])
+def test_bf16_scale_kernels_match_ref(entry):
+    """Both Pallas kernels must accept bf16 scale rows (DMA'd in storage
+    dtype, widened in VMEM) and still match the reference oracle."""
+    q, kp, vp, _, _, _, _, tbl, lens = _paged_int8_setup(
+        B=2, H=4, Hkv=2, D=128, page=16, npg=2, lengths=[13, 32])
+    kq, ksc = quantize_vec(kp, scale_dtype=jnp.bfloat16)
+    vq, vsc = quantize_vec(vp, scale_dtype=jnp.bfloat16)
+    if entry == "decode":
+        want = ops.pim_paged_attention(q, kq, vq, tbl, lens, ksc, vsc,
+                                       impl="reference")
+        got = ops.pim_paged_attention(q, kq, vq, tbl, lens, ksc, vsc,
+                                      impl="interpret")
+    else:
+        qs = jax.random.normal(KEY, (2, 4, 4, 128), jnp.float32)
+        st = jnp.asarray([9, 28], jnp.int32)
+        want = ops.pim_paged_prefill_attention(
+            qs, kq, vq, tbl, lens, st, ksc, vsc, impl="reference")
+        got = ops.pim_paged_prefill_attention(
+            qs, kq, vq, tbl, lens, st, ksc, vsc, impl="interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_page_kv_bytes_bf16_scale_rows():
+    import dataclasses
+    cfg = dataclasses.replace(get_config("qwen2_1_5b", smoke=True),
+                              compute_dtype="bfloat16", head_dim=64)
+    unit = cfg.n_layers * cfg.n_kv_heads * 16
+    q8f = kv.page_kv_bytes(cfg, 16, "int8")
+    q8b = kv.page_kv_bytes(cfg, 16, "int8", "bfloat16")
+    assert q8f == 2 * unit * (cfg.head_dim + 4)
+    assert q8b == 2 * unit * (cfg.head_dim + 2)      # payload + bf16 scale
+    # bf16 scales never change fp pool sizing.
+    assert kv.page_kv_bytes(cfg, 16, "model", "bfloat16") == \
+        kv.page_kv_bytes(cfg, 16, "model")
+
+
+def test_init_paged_cache_bf16_scale_pools_and_appends():
+    """kv_scale_dtype=bfloat16 must build bf16 scale pools and both
+    append paths must write scales in the pool's dtype."""
+    cfg = get_config("gpt2_medium", smoke=True)
+    cache = kv.init_paged_cache(cfg, 1, 4, 4, 2, kv_dtype="int8",
+                                kv_scale_dtype="bfloat16")
+    assert cache.k_scale.dtype == jnp.bfloat16
+    assert cache.v_scale.dtype == jnp.bfloat16
+    with pytest.raises(ValueError, match="kv_scale_dtype"):
+        kv.init_paged_cache(cfg, 1, 4, 4, 2, kv_dtype="int8",
+                            kv_scale_dtype="float16")
+    Hkv, D = cfg.n_kv_heads, cfg.head_dim
+    k_new = jax.random.normal(KEY, (1, Hkv, D))
+    tables = jnp.array([[1, kv.TRASH_PAGE]], jnp.int32)
+    kp, vp, ksc, vsc = kv.append_kv_pages(
+        cache.k_pages[0], cache.v_pages[0], tables,
+        jnp.zeros((1,), jnp.int32), k_new, k_new,
+        cache.k_scale[0], cache.v_scale[0])
+    assert ksc.dtype == jnp.bfloat16
+    _, want_sc = quantize_vec(k_new, scale_dtype=jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(ksc[1, :, 0]),
+                                  np.asarray(want_sc[0]))
+    kp2, vp2, ksc2, _ = kv.append_chunk_kv_pages(
+        cache.k_pages[0], cache.v_pages[0], tables,
+        jnp.zeros((1,), jnp.int32), k_new[:, None], k_new[:, None],
+        cache.k_scale[0], cache.v_scale[0])
+    assert ksc2.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(ksc2[1, :, 0]),
+                                  np.asarray(want_sc[0]))
+
+
+def test_kv_scale_dtype_engine_validation():
+    cfg = get_config("gpt2_medium", smoke=True)
+    params = api.init_params(KEY, cfg)
+    with pytest.raises(ValueError, match="scale"):
+        ServingEngine(params, cfg, ENGINE, slots=1, max_len=16,
+                      paged=True, kv_scale_dtype="bfloat16")  # fp pools
+    eng = ServingEngine(params, cfg, ENGINE, slots=1, max_len=16,
+                        paged=True, kv_cache_dtype="int8",
+                        kv_scale_dtype="bfloat16")
+    assert eng.cache.k_scale.dtype == jnp.bfloat16
+    # Byte-budget sizing sees the smaller pages: more of them fit the
+    # same fp budget than with f32 scale rows.
+    engf = ServingEngine(params, cfg, ENGINE, slots=1, max_len=16,
+                         paged=True, kv_cache_dtype="int8")
+    assert eng.allocator.num_pages >= engf.allocator.num_pages
+
+
+def test_bf16_scale_serving_greedy_exact_match():
+    """End-to-end: int8 pools with bf16 scale rows reproduce the fp
+    engine's greedy outputs exactly on the serving test prompts (the
+    added scale rounding stays below every argmax margin here)."""
+    cfg = get_config("gpt2_medium", smoke=True)
+    params = api.init_params(KEY, cfg)
+    prompts, new = _workload(cfg)
+    ref, _ = _drain_outputs(params, cfg, prompts, new, paged=True,
+                            page_size=4)
+    out, eng = _drain_outputs(params, cfg, prompts, new, paged=True,
+                              page_size=4, kv_cache_dtype="int8",
+                              kv_scale_dtype="bfloat16")
+    assert eng.cache.k_scale.dtype == jnp.bfloat16
+    assert out == ref

@@ -161,3 +161,91 @@ def test_serving_with_lut_engine():
     toks, stats = generate(params, prompts, cfg, lut, gen)
     assert toks.shape == (2, 4)
     assert stats["sec_per_token"] > 0
+
+
+def test_dense_admit_donation_outputs_unchanged():
+    """Regression for the donated dense admission program: admitting
+    requests of different prompt lengths into reused slots (multiple
+    compiles of the donated jit, cache rebound each time) must leave
+    outputs exactly equal to solo whole-batch generation."""
+    cfg, params = _setup()
+    gen = GenConfig(temperature=0.0, stop_on_eos=False)
+    rng = np.random.RandomState(4)
+    prompts = [rng.randint(2, cfg.vocab, size=n) for n in (5, 9, 5, 7)]
+    new = [4, 6, 5, 3]
+    eng = ServingEngine(params, cfg, ENGINE, slots=2, max_len=32, gen=gen)
+    uids = [eng.submit(p.copy(), max_new_tokens=n)
+            for p, n in zip(prompts, new)]
+    done = eng.run(max_steps=200)
+    by = {r.uid: r.generated for r in done}
+    for p, n, u in zip(prompts, new, uids):
+        ref, _ = generate(params, jnp.asarray(p[None]), cfg, ENGINE,
+                          GenConfig(max_new_tokens=n, temperature=0.0,
+                                    stop_on_eos=False))
+        np.testing.assert_array_equal(np.asarray(by[u]),
+                                      np.asarray(ref[0]))
+
+
+def test_engine_stats_fields():
+    """ServingEngine.stats(): token accounting mirrors generate()'s
+    fields (tokens, tokens_budget, sec_per_token) and the speculative
+    counters are zero when speculation is off."""
+    cfg, params = _setup()
+    gen = GenConfig(temperature=0.0, stop_on_eos=False)
+    prompts = np.asarray(jax.random.randint(KEY, (3, 6), 2, cfg.vocab))
+    eng = ServingEngine(params, cfg, ENGINE, slots=2, max_len=32, gen=gen,
+                        paged=True, page_size=4)
+    for i in range(3):
+        eng.submit(prompts[i], max_new_tokens=5)
+    eng.run(max_steps=200)
+    st = eng.stats()
+    assert st["tokens"] == 15
+    assert st["tokens_budget"] == 15
+    assert st["sec_per_token"] > 0
+    assert st["prefill_tokens"] == eng.prefill_tokens
+    assert st["proposed"] == st["accepted"] == st["verify_passes"] == 0
+    assert st["acceptance_rate"] == 0.0
+
+
+def test_engine_stats_counts_unfinished_budget():
+    """tokens_budget covers admitted-but-unfinished requests too, and
+    tokens counts their partial output (honest mid-flight reporting)."""
+    cfg, params = _setup()
+    gen = GenConfig(temperature=0.0, stop_on_eos=False)
+    prompts = np.asarray(jax.random.randint(KEY, (2, 5), 2, cfg.vocab))
+    eng = ServingEngine(params, cfg, ENGINE, slots=2, max_len=32, gen=gen)
+    eng.submit(prompts[0], max_new_tokens=8)
+    eng.submit(prompts[1], max_new_tokens=8)
+    for _ in range(3):
+        eng.step()
+    st = eng.stats()
+    assert st["tokens_budget"] == 16
+    assert 0 < st["tokens"] < 16
+
+
+def test_engine_stats_under_speculative_run():
+    """Speculative engine stats: tokens/tokens_budget/sec_per_token stay
+    honest, acceptance aggregates match the per-request counters, and
+    tokens_per_pass > 1 when the drafter is the target model itself."""
+    from repro.serving.speculative import SpecConfig
+    cfg, params = _setup()
+    gen = GenConfig(temperature=0.0, stop_on_eos=False)
+    prompts = np.asarray(jax.random.randint(KEY, (3, 6), 2, cfg.vocab))
+    eng = ServingEngine(params, cfg, ENGINE, slots=2, max_len=32, gen=gen,
+                        paged=True, page_size=4,
+                        speculative=SpecConfig(mode="draft-model", k=3,
+                                               draft_cfg=cfg,
+                                               draft_params=params))
+    for i in range(3):
+        eng.submit(prompts[i], max_new_tokens=8)
+    eng.run(max_steps=200)
+    st = eng.stats()
+    assert st["tokens"] == 24
+    assert st["tokens_budget"] == 24
+    assert st["sec_per_token"] > 0
+    assert st["proposed"] == sum(r.proposed for r in eng.finished)
+    assert st["accepted"] == sum(r.accepted for r in eng.finished)
+    assert st["acceptance_rate"] == 1.0       # self-draft accepts all
+    assert 0 < st["verify_passes"] < st["tokens"]
+    assert st["verify_per_token"] < 1.0
+    assert st["tokens_per_pass"] > 1.0
