@@ -41,24 +41,43 @@ generated token (the whole point: each pass streams the model once but
 commits 1 + accepted tokens). Acceptance rate, verify passes per token,
 and decode ms/token for both engines go to the JSON artifact.
 
+Part 6 — serving telemetry: a *bursty* mixed workload (half the
+requests up front, the rest arriving mid-flight) drained with telemetry
+off and on. Outputs must be bit-identical — the observability layer
+records at step boundaries only, never inside jit — and under --smoke
+the telemetry-enabled decode ms/step must stay within 5% of disabled
+(the overhead regression gate, min-over-interleaved-trials so host
+noise cancels). The enabled run exports the metrics snapshot (pool
+occupancy timeline, prefix-cache hit rate, admission rejections,
+per-request inter-token p50/p99) and a Chrome `trace_event` file
+viewable at https://ui.perfetto.dev — the baselines the SLO-scheduler
+work will regress against.
+
 Reports, per engine: decode steps to drain, wall time (first step
 excluded as compile warmup), generated tokens/sec, KV bytes
 provisioned, prefill tokens, and peak pages. `--json PATH` (default
 bench_smoke.json under --smoke) exports the headline numbers for the
-perf-trajectory record. `--parts` selects which parts run (e.g.
-`--parts 1,2,4` skips the slow jitter study); `--kv-cache-dtype int8`
-serves parts 1-3 and 5's paged engines from int8 pools.
+perf-trajectory record, stamped with schema version, git SHA, jax
+version, and device kind (`repro.serving.telemetry.bench_metadata`);
+under --smoke the same stamped summary is also written to
+`BENCH_smoke.json` at the repo root — the tracked cross-PR trajectory
+record. `--parts` selects which parts run (e.g. `--parts 1,2,4` skips
+the slow jitter study); `--kv-cache-dtype int8` serves parts 1-3, 5,
+and 6's paged engines from int8 pools.
 
     PYTHONPATH=src python benchmarks/paged_serving.py
     PYTHONPATH=src python benchmarks/paged_serving.py --requests 16 --slots 4
     PYTHONPATH=src python benchmarks/paged_serving.py --requests 4 --smoke
     PYTHONPATH=src python benchmarks/paged_serving.py --smoke \
         --kv-cache-dtype int8 --parts 1,2,5
+    PYTHONPATH=src python benchmarks/paged_serving.py --smoke --parts 6 \
+        --trace-out trace.json --metrics-out telemetry.json
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -69,6 +88,9 @@ from repro.core.salpim import SalPimConfig, SalPimEngine
 from repro.models import api
 from repro.serving.engine import GenConfig, ServingEngine
 from repro.serving.speculative import SpecConfig
+from repro.serving.telemetry import Telemetry, bench_metadata
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _mixed_workload(rng, vocab, n, max_len):
@@ -120,6 +142,45 @@ def _repetitive_workload(rng, vocab, n, max_len):
     return reqs
 
 
+def _engine_state_dump(eng):
+    """Engine state attached to drain-timeout errors, so a wedged CI run
+    is diagnosable from the log alone: per-slot request progress, the
+    waiting queue, pool occupancy, and (when enabled) the telemetry
+    snapshot's counters and admission view."""
+    slots = []
+    for i, r in enumerate(eng.active):
+        if r is None:
+            slots.append({"slot": i, "empty": True})
+            continue
+        slots.append({"slot": i, "uid": r.uid,
+                      "prompt_tokens": len(r.prompt),
+                      "prefill_cursor": r.prefill_cursor,
+                      "generated": len(r.generated),
+                      "max_new_tokens": r.max_new_tokens})
+    dump = {
+        "queue": [{"uid": r.uid, "prompt_tokens": len(r.prompt),
+                   "max_new_tokens": r.max_new_tokens} for r in eng.queue],
+        "slots": slots,
+    }
+    if eng.allocator is not None:
+        a = eng.allocator
+        dump["pool"] = {"num_pages": a.num_pages,
+                        "used_pages": a.used_pages,
+                        "free_pages": a.free_pages,
+                        "available_pages": a.available_pages}
+    if eng.telemetry.enabled:
+        snap = eng.telemetry.snapshot()
+        dump["telemetry"] = {"counters": snap["counters"],
+                             "admission": snap["admission"]}
+    return dump
+
+
+def _not_drained(eng, max_steps):
+    return RuntimeError(
+        f"engine not drained after {max_steps} steps; state:\n"
+        + json.dumps(_engine_state_dump(eng), indent=2, default=str))
+
+
 def _drain(eng, reqs, max_steps=10_000):
     for prompt, new in reqs:
         eng.submit(prompt, max_new_tokens=new)
@@ -138,10 +199,7 @@ def _drain(eng, reqs, max_steps=10_000):
     t0 = time.perf_counter()
     while not drained():
         if steps >= max_steps:
-            raise RuntimeError(
-                f"engine not drained after {max_steps} steps "
-                f"(queue={len(eng.queue)}, "
-                f"active={sum(a is not None for a in eng.active)})")
+            raise _not_drained(eng, max_steps)
         eng.step()
         steps += 1
     dt = time.perf_counter() - t0
@@ -190,8 +248,7 @@ def _jitter_trial(eng, res_prompts, res_new, long_prompt, long_new,
     try:
         while eng.queue or any(a is not None for a in eng.active):
             if len(steps) >= max_steps:
-                raise RuntimeError(
-                    f"jitter trial not drained after {max_steps} steps")
+                raise _not_drained(eng, max_steps)
             t0 = time.perf_counter()
             eng.step()
             dt = time.perf_counter() - t0
@@ -237,7 +294,7 @@ def _part4(params, cfg, engine, gen, *, slots, max_len, requests,
         dt = 0.0
         while eng.queue or any(a is not None for a in eng.active):
             if steps >= max_steps:
-                raise RuntimeError(f"part 4 not drained after {steps} steps")
+                raise _not_drained(eng, max_steps)
             # Clock only the engine step; the logit snapshot below is
             # bench instrumentation (device->host copy) and would
             # otherwise pad both engines' step_ms toward parity.
@@ -376,6 +433,147 @@ def _part5(params, cfg, engine, gen, *, slots, max_len, requests,
             "ms_per_token_on": stats["spec-on"]["ms_per_token"]}
 
 
+def _bursty_arrivals(rng, vocab, n, max_len):
+    """Part 6's arrival schedule: half the requests land at step 0, the
+    rest in a burst a few steps in — oversubscription that exercises
+    queueing, watermark blocking, and the pool-occupancy swings the
+    telemetry timeline is there to capture. Returns a sorted list of
+    (step_index, [(prompt, max_new), ...])."""
+    reqs = _mixed_workload(rng, vocab, n, max_len)
+    split = max(1, n // 2)
+    return [(0, reqs[:split]), (3, reqs[split:])]
+
+
+def _drain_bursty(eng, arrivals, max_steps):
+    """Submit per the arrival schedule, step until drained. Returns
+    steps, wall seconds, and outputs in submit order. Every step is
+    timed — part 6 warms each engine with one untimed drain first, so
+    compiles never land inside a measured trial."""
+    uids = []
+    pending = list(arrivals)
+    step = 0
+    t0 = time.perf_counter()
+    while pending or eng.queue or any(a is not None for a in eng.active):
+        while pending and pending[0][0] <= step:
+            _, batch = pending.pop(0)
+            uids += [eng.submit(p.copy(), max_new_tokens=n)
+                     for p, n in batch]
+        if step >= max_steps:
+            raise _not_drained(eng, max_steps)
+        eng.step()
+        step += 1
+    dt = time.perf_counter() - t0
+    by = {r.uid: list(r.generated) for r in eng.finished}
+    return {"steps": step, "sec": dt, "outputs": [by[u] for u in uids]}
+
+
+def _part6(params, cfg, engine, gen, *, slots, max_len, requests,
+           page_size, seed, max_steps, smoke, kv_cache_dtype="model",
+           trace_out=None, metrics_out=None, trials=3):
+    """Serving telemetry on a bursty mixed workload: zero-cost-when-off
+    gate plus the observability exports.
+
+    Two identical chunked-prefill engines drain the same arrival
+    schedule, telemetry off and on. Asserts: (1) greedy outputs are
+    bit-identical — telemetry records at step boundaries only, never
+    inside jit; (2) the disabled engine's registry stays empty (the
+    no-op is real, not just cheap); (3) counters are exact — the window
+    records precisely trials x the workload's token/request totals; (4)
+    under --smoke, enabled ms/step stays within 5% of disabled
+    (min over interleaved trials, so both engines sample the same host
+    weather and additive noise cancels). The enabled run then exports
+    the metrics snapshot and a Chrome trace_event file — the occupancy
+    timeline + inter-token histogram baselines for the SLO-scheduler
+    work.
+    """
+    rng = np.random.RandomState(seed + 4)
+    arrivals = _bursty_arrivals(rng, cfg.vocab, requests, max_len)
+    n_reqs = sum(len(batch) for _, batch in arrivals)
+    n_new = sum(n for _, batch in arrivals for _, n in batch)
+    chunk = max(4, max_len // 4)
+    tel = Telemetry(enabled=True)
+    engines = {}
+    for label, t in [("telemetry-off", None), ("telemetry-on", tel)]:
+        engines[label] = ServingEngine(
+            params, cfg, engine, slots=slots, max_len=max_len, gen=gen,
+            paged=True, page_size=page_size, prefix_sharing=True,
+            prefill_chunk_tokens=chunk, kv_cache_dtype=kv_cache_dtype,
+            telemetry=t)
+
+    # Warmup drain per engine pays every jit compile; its outputs feed
+    # the bit-identicality assert (the engine is deterministic, so the
+    # timed drains below replay the same tokens).
+    outs = {label: _drain_bursty(eng, arrivals, max_steps)["outputs"]
+            for label, eng in engines.items()}
+    assert outs["telemetry-on"] == outs["telemetry-off"], \
+        "telemetry changed greedy outputs"
+    assert engines["telemetry-off"].telemetry.registry.empty, \
+        "disabled telemetry populated its metrics registry"
+
+    tel.reset()                       # measured window: the timed trials
+    times = {label: [] for label in engines}
+    import gc
+    gc.collect()
+    gc.disable()
+    try:
+        for _ in range(trials):
+            for label, eng in engines.items():
+                st = _drain_bursty(eng, arrivals, max_steps)
+                times[label].append(st["sec"] / max(st["steps"], 1))
+    finally:
+        gc.enable()
+    off_ms = min(times["telemetry-off"]) * 1e3
+    on_ms = min(times["telemetry-on"]) * 1e3
+    ratio = on_ms / max(off_ms, 1e-12)
+
+    snap = tel.snapshot()
+    counters = snap["counters"]
+    assert counters["tokens.generated"] == trials * n_new, \
+        (counters["tokens.generated"], trials, n_new)
+    assert counters["requests.finished"] == trials * n_reqs
+    # The SLO-scheduler baselines the snapshot must carry:
+    assert len(snap["pool"]["occupancy_timeline"]) == snap["steps"]["count"]
+    assert 0.0 <= snap["prefix_cache"]["hit_rate"] <= 1.0
+    assert "rejected" in snap["admission"]
+    per_req = snap["requests"]["per_request"]
+    assert per_req and all("inter_token_p50_sec" in r and
+                           "inter_token_p99_sec" in r for r in per_req)
+
+    if metrics_out:
+        tel.export_json(metrics_out)
+        print(f"wrote {metrics_out}")
+    n_events = None
+    if trace_out:
+        n_events = tel.export_chrome_trace(trace_out)
+        with open(trace_out) as f:
+            events = json.load(f)["traceEvents"]
+        open_spans = {}
+        for e in events:
+            if e["ph"] == "B":
+                open_spans[e["tid"]] = open_spans.get(e["tid"], 0) + 1
+            elif e["ph"] == "E":
+                open_spans[e["tid"]] = open_spans.get(e["tid"], 0) - 1
+        assert all(v == 0 for v in open_spans.values()), \
+            f"unbalanced B/E spans in {trace_out}: {open_spans}"
+        print(f"wrote {trace_out} ({n_events} events, "
+              "load at https://ui.perfetto.dev)")
+
+    print(f"{'telemetry':>14}: {off_ms:.3f} -> {on_ms:.3f} ms/step "
+          f"({ratio:.3f}x) over {trials} interleaved trials, outputs "
+          f"bit-identical, {counters['tokens.generated']} tokens and "
+          f"{snap['steps']['count']} steps recorded, prefix-cache hit "
+          f"rate {snap['prefix_cache']['hit_rate']:.0%}")
+    if smoke:
+        assert ratio <= 1.05, (
+            f"telemetry overhead {ratio:.3f}x exceeds the 5% budget "
+            f"({off_ms:.3f} -> {on_ms:.3f} ms/step)")
+    return {"step_ms_off": off_ms, "step_ms_on": on_ms,
+            "overhead_ratio": ratio,
+            "prefix_cache_hit_rate": snap["prefix_cache"]["hit_rate"],
+            "tokens_recorded": counters["tokens.generated"],
+            "trace_events": n_events}
+
+
 def _part3(cfg, engine, gen, *, max_len, page_size, seed, max_steps, smoke,
            kv_cache_dtype="model"):
     """Decode-latency jitter, one-shot ("stall") vs chunked prefill.
@@ -470,7 +668,8 @@ def _part3(cfg, engine, gen, *, max_len, page_size, seed, max_steps, smoke,
 
 def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
         page_size=16, seed=0, max_steps=10_000, smoke=False,
-        json_path=None, kv_cache_dtype="model", parts=(1, 2, 3, 4, 5)):
+        json_path=None, kv_cache_dtype="model", parts=(1, 2, 3, 4, 5, 6),
+        trace_out=None, metrics_out=None):
     cfg = get_config(arch, smoke=True)
     engine = SalPimEngine.create(SalPimConfig())
     params = api.init_params(jax.random.PRNGKey(0), cfg)
@@ -601,11 +800,44 @@ def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
             "decode_ms_per_token_spec_on": spec["ms_per_token_on"],
         })
 
+    # -- part 6: serving telemetry (overhead gate + exports) ----------------
+    # Like part 3, the smoke assert is a wall-clock comparison; one retry
+    # absorbs the rare run where host jitter survives the min-over-
+    # interleaved-trials estimator (a genuine regression fails both).
+    if 6 in parts:
+        kw = dict(slots=slots, max_len=max_len, requests=requests,
+                  page_size=page_size, seed=seed, max_steps=max_steps,
+                  smoke=smoke, kv_cache_dtype=kv_cache_dtype,
+                  trace_out=trace_out, metrics_out=metrics_out)
+        try:
+            t6 = _part6(params, cfg, engine, gen, **kw)
+        except AssertionError as e:
+            print(f"part 6 retry (noisy host?): {e}")
+            t6 = _part6(params, cfg, engine, gen, **kw)
+        summary.update({
+            "telemetry_step_ms_off": t6["step_ms_off"],
+            "telemetry_step_ms_on": t6["step_ms_on"],
+            "telemetry_overhead_ratio": t6["overhead_ratio"],
+            "telemetry_prefix_cache_hit_rate": t6["prefix_cache_hit_rate"],
+            "telemetry_trace_events": t6["trace_events"],
+        })
+
+    # Every export carries its provenance: schema version, git SHA, jax
+    # version, device kind — cross-PR trajectory comparisons need to know
+    # what produced each number.
+    summary["meta"] = bench_metadata()
     if json_path:
         with open(json_path, "w") as f:
             json.dump(summary, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"wrote {json_path}")
+        if smoke:
+            # The tracked cross-PR record at the repo root.
+            root_json = os.path.join(REPO_ROOT, "BENCH_smoke.json")
+            with open(root_json, "w") as f:
+                json.dump(summary, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"wrote {root_json}")
     return rows, summary
 
 
@@ -626,17 +858,25 @@ def main():
                          "chunked-prefill p99 win and writes --json")
     ap.add_argument("--kv-cache-dtype", default="model",
                     choices=["model", "int8"],
-                    help="KV pool storage for parts 1-3 and 5's paged "
+                    help="KV pool storage for parts 1-3, 5, and 6's paged "
                          "engines (part 4 always compares model vs int8)")
-    ap.add_argument("--parts", default="1,2,3,4,5",
+    ap.add_argument("--parts", default="1,2,3,4,5,6",
                     help="comma-separated parts to run (e.g. 1,2,4 skips "
                          "the slow decode-jitter study and the "
-                         "speculative comparison)")
+                         "speculative and telemetry comparisons)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the headline numbers (tokens/s, prefill "
                          "tokens saved, peak pages, inter-token p50/p99, "
-                         "int8 KV memory/latency) as JSON (default under "
-                         "--smoke: bench_smoke.json)")
+                         "int8 KV memory/latency, telemetry overhead) as "
+                         "JSON (default under --smoke: bench_smoke.json)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="part 6's Chrome trace_event export (default "
+                         "trace_smoke.json under --smoke, else "
+                         "trace_part6.json; open at ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="part 6's metrics-snapshot JSON export (default "
+                         "telemetry_smoke.json under --smoke, else "
+                         "telemetry_part6.json)")
     args = ap.parse_args()
     if args.smoke:
         args.requests = min(args.requests, 4)
@@ -646,11 +886,18 @@ def main():
         args.max_steps = min(args.max_steps, 2_000)
         if args.json is None:
             args.json = "bench_smoke.json"
+    if args.trace_out is None:
+        args.trace_out = ("trace_smoke.json" if args.smoke
+                          else "trace_part6.json")
+    if args.metrics_out is None:
+        args.metrics_out = ("telemetry_smoke.json" if args.smoke
+                            else "telemetry_part6.json")
     parts = tuple(int(p) for p in args.parts.split(",") if p)
     run(arch=args.arch, slots=args.slots, max_len=args.max_len,
         requests=args.requests, page_size=args.page_size, seed=args.seed,
         max_steps=args.max_steps, smoke=args.smoke, json_path=args.json,
-        kv_cache_dtype=args.kv_cache_dtype, parts=parts)
+        kv_cache_dtype=args.kv_cache_dtype, parts=parts,
+        trace_out=args.trace_out, metrics_out=args.metrics_out)
 
 
 if __name__ == "__main__":

@@ -4,6 +4,8 @@ slots (slot-based admission, per-request lengths, EOS release).
 
     PYTHONPATH=src python examples/serve_batched.py
     PYTHONPATH=src python examples/serve_batched.py --paged --page-size 16
+    PYTHONPATH=src python examples/serve_batched.py --paged \
+        --telemetry --trace-out trace.json
 """
 import argparse
 import time
@@ -15,6 +17,7 @@ from repro.configs import get_config
 from repro.core.salpim import SalPimConfig, SalPimEngine
 from repro.models import api
 from repro.serving.engine import GenConfig, ServingEngine
+from repro.serving.telemetry import Telemetry
 
 
 def main():
@@ -58,10 +61,20 @@ def main():
                          "of the serving model on its own dense cache")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="drafted tokens per verify pass")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the serving telemetry layer: metric "
+                         "counters/gauges/histograms, per-request "
+                         "lifecycle traces, per-step phase timings; a "
+                         "snapshot summary is printed after the drain")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace_event timeline of the run "
+                         "(implies --telemetry; open at ui.perfetto.dev)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=10)
     args = ap.parse_args()
+    if args.trace_out:
+        args.telemetry = True
 
     cfg = get_config("qwen2-1.5b", smoke=True)
     engine = SalPimEngine.create(SalPimConfig(nonlinear_mode="lut"))
@@ -83,6 +96,7 @@ def main():
         else:
             speculative = SpecConfig(mode="ngram", k=args.spec_k)
 
+    telemetry = Telemetry(enabled=True) if args.telemetry else None
     eng = ServingEngine(params, cfg, engine, slots=args.slots,
                         max_len=args.max_len,
                         gen=GenConfig(temperature=0.0, stop_on_eos=False),
@@ -92,7 +106,8 @@ def main():
                         prefill_chunk_tokens=args.prefill_chunk_tokens,
                         kv_cache_dtype=args.kv_cache_dtype,
                         kv_scale_dtype=args.kv_scale_dtype,
-                        speculative=speculative)
+                        speculative=speculative,
+                        telemetry=telemetry)
     rng = np.random.RandomState(0)
     shared = rng.randint(2, cfg.vocab, size=args.shared_prefix)
     uids = []
@@ -134,6 +149,23 @@ def main():
               f"{st['spec_rounds']} verify rounds for {st['tokens']} "
               f"tokens ({st['verify_per_token']:.2f} rounds/token, "
               f"{st['tokens_per_pass']:.2f} tokens/round)")
+    if telemetry is not None:
+        snap = telemetry.snapshot()
+        phases = snap["steps"]["phase_sec"]
+        busy = {p: s for p, s in phases.items() if s > 0}
+        per_req = snap["requests"]["per_request"]
+        ttfts = sorted(r["ttft_sec"] for r in per_req
+                       if r["ttft_sec"] is not None)
+        print(f"telemetry: {snap['steps']['count']} steps, phase split "
+              + ", ".join(f"{p} {s * 1e3:.1f} ms" for p, s in busy.items()))
+        if ttfts:
+            print(f"telemetry: ttft median {ttfts[len(ttfts) // 2] * 1e3:.1f}"
+                  f" ms over {len(ttfts)} requests, prefix-cache hit rate "
+                  f"{snap['prefix_cache']['hit_rate']:.0%}")
+        if args.trace_out:
+            n = telemetry.export_chrome_trace(args.trace_out)
+            print(f"telemetry: wrote {args.trace_out} ({n} trace events, "
+                  "open at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

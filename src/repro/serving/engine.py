@@ -30,6 +30,7 @@ from repro.serving import kvcache as kv
 from repro.models.config import ModelConfig
 from repro.serving.sampling import sample
 from repro.serving.speculative import SpecConfig, greedy_accept, make_drafter
+from repro.serving.telemetry import NULL_TELEMETRY, Telemetry
 
 Array = jax.Array
 
@@ -186,6 +187,16 @@ class ServingEngine:
     in-pool. Greedy outputs stay bit-identical with speculation on or
     off; mid-prefill slots never speculate (they are not in the decode
     batch until their prompt cursor finishes).
+
+    `telemetry=Telemetry(enabled=True)` (serving/telemetry.py) attaches
+    the observability layer: per-step phase records (admit / chunk
+    prefill / draft / verify / decode), pool occupancy + watermark
+    gauges, per-request lifecycle traces (submit -> admit -> chunks ->
+    tokens -> finish), and allocator counters (prefix-cache hits, COW
+    forks, admission rejections). The default is a no-op: nothing is
+    recorded, no host sync is added, and serving outputs are
+    bit-identical with telemetry on or off — instrumentation lives at
+    step boundaries only, never inside the jitted programs.
     """
 
     def __init__(self, params: dict, model_cfg: ModelConfig,
@@ -196,13 +207,15 @@ class ServingEngine:
                  prefill_chunk_tokens: Optional[int] = None,
                  kv_cache_dtype: Optional[str] = None,
                  kv_scale_dtype: str = "float32",
-                 speculative: Optional[SpecConfig] = None, seed: int = 0):
+                 speculative: Optional[SpecConfig] = None,
+                 telemetry: Optional[Telemetry] = None, seed: int = 0):
         self.params = params
         self.cfg = model_cfg
         self.engine = engine
         self.slots = slots
         self.max_len = max_len
         self.gen = gen
+        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
         self.queue: list[Request] = []
         self.active: list[Optional[Request]] = [None] * slots
         self.finished: list[Request] = []
@@ -227,6 +240,16 @@ class ServingEngine:
         self.verify_passes = 0
         self.spec_rounds = 0
         self._step_sec = 0.0
+        # Per-phase wall time (stats() exposes these; sec_per_token keeps
+        # its historical total-step definition). Always accumulated — a
+        # handful of perf_counter() calls per step, nanoseconds against
+        # a millisecond-scale step.
+        self._admit_sec = 0.0
+        self._chunk_sec = 0.0
+        self._draft_sec = 0.0
+        self._verify_sec = 0.0
+        self._decode_sec = 0.0
+        self._step_idx = 0
 
         self.paged = paged
         if prefill_chunk_tokens is not None:
@@ -269,7 +292,8 @@ class ServingEngine:
                     "speculative decoding is greedy-only: acceptance "
                     "compares drafts against argmax, which is exact "
                     "only at temperature 0")
-        self.drafter = (make_drafter(speculative, engine, max_len)
+        self.drafter = (make_drafter(speculative, engine, max_len,
+                                     telemetry=self.telemetry)
                         if speculative is not None else None)
         if paged:
             self._kv = kv
@@ -288,7 +312,8 @@ class ServingEngine:
                     model_cfg, page_size, "model")
                 num_pages = budget // self.page_bytes + 1
             self.allocator = kv.BlockAllocator(
-                num_pages, page_size, prefix_sharing=prefix_sharing)
+                num_pages, page_size, prefix_sharing=prefix_sharing,
+                telemetry=self.telemetry)
             self.cache = model_api.init_paged_cache(
                 model_cfg, slots, num_pages, page_size, max_pages,
                 kv_dtype=resolved_kv, kv_scale_dtype=kv_scale_dtype)
@@ -352,6 +377,7 @@ class ServingEngine:
         worst = kv.BlockAllocator.worst_case_tokens(len(prompt),
                                                    max_new_tokens)
         if worst > self.max_len:
+            self.telemetry.count("admission.rejected.over_max_len")
             raise ValueError(
                 f"request can occupy {worst} cache positions "
                 f"(prompt {len(prompt)}, max_new {max_new_tokens}) "
@@ -364,14 +390,18 @@ class ServingEngine:
             need = self.allocator.pages_for(worst)
             usable = self.allocator.num_pages - 1
             if need > usable:
+                self.telemetry.count("admission.rejected.over_pool_capacity")
                 raise ValueError(
                     f"request needs {need} pages worst case but the pool "
                     f"has {usable}; no reservation was made")
         self._uid += 1
         self.queue.append(Request(self._uid, prompt, max_new_tokens))
+        self.telemetry.request_submitted(self._uid, len(prompt),
+                                         max_new_tokens)
         return self._uid
 
     def _admit(self):
+        tel = self.telemetry
         for slot in range(self.slots):
             if self.active[slot] is None and self.queue:
                 req = self.queue[0]
@@ -385,6 +415,10 @@ class ServingEngine:
                     res = self.allocator.admit_tokens(
                         req.uid, req.prompt, req.max_new_tokens)
                     if res is None:
+                        # One blocked-step event per engine step the
+                        # FIFO head waits at the watermark (head-of-line
+                        # blocking, visible in the snapshot).
+                        tel.count("admission.blocked_steps")
                         if not any(r is not None for r in self.active):
                             # Nothing holds pages, yet the head still
                             # doesn't fit: it never will (submit() bounds
@@ -410,10 +444,18 @@ class ServingEngine:
                                              len(req.prompt) - 1)
                     self.prefill_tokens_saved += req.prefill_cursor
                     self._host_len[slot] = 0
+                    tel.request_admitted(req.uid, slot, shared_tokens)
                 else:
-                    self.cache, self.last_logits = self._dense_admit(
-                        self.params, jnp.asarray(req.prompt[None]),
-                        jnp.int32(slot), self.cache, self.last_logits)
+                    tel.request_admitted(req.uid, slot, 0)
+                    t0c = tel.now() if tel.enabled else 0.0
+                    with tel.annotation("dense_admit_prefill"):
+                        self.cache, self.last_logits = self._dense_admit(
+                            self.params, jnp.asarray(req.prompt[None]),
+                            jnp.int32(slot), self.cache, self.last_logits)
+                    if tel.enabled:
+                        # Dense admission prefills the whole prompt in
+                        # one program: record it as a single chunk span.
+                        tel.chunk(req.uid, t0c, tel.now(), len(req.prompt))
                     self.prefill_tokens += len(req.prompt)
                     req.prefill_cursor = len(req.prompt)
                     self._host_len[slot] = len(req.prompt)
@@ -461,11 +503,14 @@ class ServingEngine:
         row = np.full((self.cache.block_tables.shape[1],), kv.TRASH_PAGE,
                       np.int32)
         row[:len(pages)] = pages
-        res = self._prefill_chunk(
-            self.params, jnp.asarray(req.prompt[start:end])[None],
-            jnp.asarray(row)[None], jnp.asarray([start], jnp.int32),
-            self.cache.k_pages, self.cache.v_pages,
-            self.cache.k_scale, self.cache.v_scale)
+        tel = self.telemetry
+        t0c = tel.now() if tel.enabled else 0.0
+        with tel.annotation("prefill_chunk"):
+            res = self._prefill_chunk(
+                self.params, jnp.asarray(req.prompt[start:end])[None],
+                jnp.asarray(row)[None], jnp.asarray([start], jnp.int32),
+                self.cache.k_pages, self.cache.v_pages,
+                self.cache.k_scale, self.cache.v_scale)
         if self.cache.quantized:
             logits1, nk, nv, nks, nvs = res
         else:
@@ -482,6 +527,8 @@ class ServingEngine:
             self._host_len[slot] = end
         self.cache = self._kv.PagedCache(lengths, tables, nk, nv, nks, nvs)
         self.peak_pages = max(self.peak_pages, self.allocator.used_pages)
+        if tel.enabled:
+            tel.chunk(req.uid, t0c, tel.now(), end - start)
 
     def _release(self, slot: int, req: Request):
         req.done = True
@@ -498,6 +545,7 @@ class ServingEngine:
         if self.drafter is not None:
             self.drafter.release(slot)
         self._host_len[slot] = 0
+        self.telemetry.request_finished(req.uid)
 
     def _map_write_range(self, slot: int, req: Request, first: int,
                          n_writes: int):
@@ -523,17 +571,49 @@ class ServingEngine:
         """One engine step: admit, run at most one prompt chunk, then one
         decode step (or, with `speculative`, one draft-verify round)
         across all fully-prefilled slots. Returns the amount of
-        outstanding work (live decodes + mid-prefill slots + queue)."""
+        outstanding work (live decodes + mid-prefill slots + queue).
+
+        Phase wall time (admit / chunk prefill / draft / verify /
+        decode) accumulates into stats(); with telemetry enabled each
+        step additionally records its phase split and the pool/queue
+        gauges at the step boundary."""
+        tel = self.telemetry
         t_start = time.perf_counter()
+        self._step_idx += 1
+        before = ((self._admit_sec, self._chunk_sec, self._draft_sec,
+                   self._verify_sec, self._decode_sec)
+                  if tel.enabled else None)
         try:
-            return self._step_inner()
+            with tel.step_annotation(self._step_idx):
+                return self._step_inner()
         finally:
-            self._step_sec += time.perf_counter() - t_start
+            dur = time.perf_counter() - t_start
+            self._step_sec += dur
+            if tel.enabled:
+                a = self.allocator
+                tel.record_step(
+                    t_start, dur,
+                    self._admit_sec - before[0],
+                    self._chunk_sec - before[1],
+                    self._draft_sec - before[2],
+                    self._verify_sec - before[3],
+                    self._decode_sec - before[4],
+                    a.used_pages if a is not None else 0,
+                    a.free_pages if a is not None else 0,
+                    a.available_pages if a is not None else 0,
+                    len(self.queue),
+                    sum(1 for r in self.active
+                        if r is not None and r.prefilling))
 
     def _step_inner(self) -> int:
+        tel = self.telemetry
+        t = time.perf_counter()
         self._admit()
+        self._admit_sec += time.perf_counter() - t
         if self.paged:
+            t = time.perf_counter()
             self._prefill_tick()
+            self._chunk_sec += time.perf_counter() - t
         n_prefilling = sum(1 for r in self.active
                            if r is not None and r.prefilling)
         ready = [i for i, r in enumerate(self.active)
@@ -542,14 +622,17 @@ class ServingEngine:
             return n_prefilling + len(self.queue)
         if self.spec is not None:
             return self._spec_round(ready) + n_prefilling + len(self.queue)
+        t_dec = time.perf_counter()
         self._key, step_key = jax.random.split(self._key)
         toks = sample(self.last_logits, step_key,
                       temperature=self.gen.temperature, top_k=self.gen.top_k)
         mask = np.zeros((self.slots,), bool)
         host_toks = np.asarray(toks)
+        t_emit = tel.now() if tel.enabled else 0.0
         for i in ready:
             req = self.active[i]
             req.generated.append(int(host_toks[i]))
+            tel.tokens(req.uid, t_emit)
             if (len(req.generated) >= req.max_new_tokens
                     or (self.gen.stop_on_eos
                         and host_toks[i] == self.gen.eos_id)):
@@ -571,11 +654,13 @@ class ServingEngine:
                 self._map_write_range(i, req, int(self._host_len[i]), 1)
             self.peak_pages = max(self.peak_pages,
                                   self.allocator.used_pages)
-        self.last_logits, self.cache = self._decode(
-            self.params, toks, self.cache)
+        with tel.annotation("decode_step"):
+            self.last_logits, self.cache = self._decode(
+                self.params, toks, self.cache)
         # Only live slots advance; released/empty slots stay parked at 0
         # (decode_step freezes zero-length slots on device too).
         self._host_len += mask
+        self._decode_sec += time.perf_counter() - t_dec
         return int(mask.sum()) + n_prefilling + len(self.queue)
 
     def _spec_round(self, ready: list[int]) -> int:
@@ -602,6 +687,9 @@ class ServingEngine:
         masked away and rewound before any later read.
         """
         k = self.spec.k
+        tel = self.telemetry
+        t_draft0 = time.perf_counter()
+        t_round0 = tel.now() if tel.enabled else 0.0
         # Greedy t0 per ready slot (speculative mode is greedy-only, so
         # no PRNG key is consumed — matching the spec-off greedy path,
         # where sample() ignores its key at temperature 0).
@@ -613,6 +701,7 @@ class ServingEngine:
             req.generated.append(t0)
             if (len(req.generated) >= req.max_new_tokens
                     or (self.gen.stop_on_eos and t0 == self.gen.eos_id)):
+                tel.tokens(req.uid, t_round0)
                 self._release(i, req)
                 continue
             # KV positions this request may still occupy are bounded by
@@ -632,8 +721,12 @@ class ServingEngine:
             req.proposed += len(drafts)
             self.spec_proposed += len(drafts)
             survivors.append((i, req, t0, drafts))
+        # Drafting is host-side work (argmaxes + drafter.propose); its
+        # cost must not be charged to the decode/verify phase.
+        self._draft_sec += time.perf_counter() - t_draft0
         if not survivors:
             return 0
+        t_ver0 = time.perf_counter()
         # Build the (slots, k+1) verify batch. Slots outside `survivors`
         # (empty, mid-prefill, or just released) keep all-trash block
         # table rows, so their padded rows scribble into the trash page
@@ -651,10 +744,11 @@ class ServingEngine:
             # fall off mapped pages into the trash page.
             self._map_write_range(i, req, L, 1 + len(drafts))
         self.peak_pages = max(self.peak_pages, self.allocator.used_pages)
-        res = self._verify(
-            self.params, jnp.asarray(tokens), self.cache.block_tables,
-            jnp.asarray(starts), self.cache.k_pages, self.cache.v_pages,
-            self.cache.k_scale, self.cache.v_scale)
+        with tel.annotation("verify_tokens"):
+            res = self._verify(
+                self.params, jnp.asarray(tokens), self.cache.block_tables,
+                jnp.asarray(starts), self.cache.k_pages, self.cache.v_pages,
+                self.cache.k_scale, self.cache.v_scale)
         if self.cache.quantized:
             vlogits, nk, nv, nks, nvs = res
         else:
@@ -667,6 +761,7 @@ class ServingEngine:
         # a (slots, k+1) int array to host instead of the full logits.
         greedy = np.asarray(jnp.argmax(vlogits, axis=-1))
         live = 0
+        t_acc = tel.now() if tel.enabled else 0.0
         updates: list[tuple[int, int]] = []          # (slot, accepted)
         for i, req, t0, drafts in survivors:
             a, hit_eos = greedy_accept(
@@ -676,6 +771,11 @@ class ServingEngine:
                 req.generated.append(int(tok))
             req.accepted += a
             self.spec_accepted += a
+            if tel.enabled:
+                # 1 + a tokens commit together — a genuine burst, so the
+                # intra-round inter-token deltas are recorded as zeros.
+                tel.tokens(req.uid, t_acc, 1 + a)
+                tel.spec_round(req.uid, t_round0, t_acc, len(drafts), a)
             new_len = int(starts[i]) + 1 + a
             if hit_eos:
                 self._release(i, req)
@@ -696,6 +796,7 @@ class ServingEngine:
             cols = jnp.asarray([a for _, a in updates])
             self.last_logits = self.last_logits.at[rows].set(
                 vlogits[rows, cols])
+        self._verify_sec += time.perf_counter() - t_ver0
         return live
 
     def _repoint(self, slot: int, logical: int, page: int):
@@ -733,6 +834,17 @@ class ServingEngine:
         speculation genuinely amortized the memory-bound stream);
         tokens_per_pass = its inverse, 1 + the average accepted drafts
         per round. With speculation off every speculative field is 0.
+
+        Phase split (new, backward-compatible additions): step wall
+        time decomposes into admit_sec (admission incl. dense prefill),
+        chunk_prefill_sec (paged prompt chunks), draft_sec (host-side
+        drafting — argmaxes + drafter.propose), verify_sec (the verify
+        forward + acceptance/rollback), and decode_sec (the plain
+        decode path: sampling + page mapping + the decode program).
+        sec_per_token keeps its historical whole-step definition;
+        model_sec_per_token charges only the model-stream phases
+        (decode + verify), so host-side draft time no longer inflates
+        the decode metric.
         """
         reqs = self.finished + [r for r in self.active if r is not None]
         tokens = sum(len(r.generated) for r in reqs)
@@ -741,6 +853,14 @@ class ServingEngine:
             "tokens": tokens,
             "tokens_budget": sum(r.max_new_tokens for r in reqs),
             "sec_per_token": self._step_sec / max(tokens, 1),
+            "step_sec": self._step_sec,
+            "admit_sec": self._admit_sec,
+            "chunk_prefill_sec": self._chunk_sec,
+            "draft_sec": self._draft_sec,
+            "verify_sec": self._verify_sec,
+            "decode_sec": self._decode_sec,
+            "model_sec_per_token": (self._decode_sec + self._verify_sec)
+            / max(tokens, 1),
             "prefill_tokens": self.prefill_tokens,
             "prefill_tokens_saved": self.prefill_tokens_saved,
             "peak_pages": self.peak_pages,

@@ -96,6 +96,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.quantize import quantize_vec
+from repro.serving.telemetry import NULL_TELEMETRY
 
 Array = jax.Array
 
@@ -383,15 +384,22 @@ class BlockAllocator:
     get refcount += 1 and the watermark only reserves the worst case
     net of shared pages. A shared page must be `fork_page`d (COW) before
     any write lands in it.
+
+    `telemetry` (serving/telemetry.py, optional) receives page-economy
+    counters: pages allocated/freed/rewound, COW forks, prefix-cache
+    page hits/misses (full prompt pages only — the unit the cache
+    shares at), and watermark refusals. All no-ops when the telemetry
+    is disabled or absent.
     """
 
     def __init__(self, num_pages: int, page_size: int,
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False, telemetry=None):
         assert num_pages >= 2, "need at least trash + 1 usable page"
         assert page_size >= 1
         self.num_pages = num_pages
         self.page_size = page_size
         self.prefix_sharing = prefix_sharing
+        self._tel = telemetry if telemetry is not None else NULL_TELEMETRY
         self._free = list(range(num_pages - 1, TRASH_PAGE, -1))
         self._reserved = 0
         self._pages: dict[int, list[int]] = {}
@@ -440,6 +448,7 @@ class BlockAllocator:
     def _alloc(self) -> int:
         page = self._free.pop()
         self._ref[page] = 1
+        self._tel.count("pool.pages_allocated")
         return page
 
     def _decref(self, page: int) -> None:
@@ -450,6 +459,7 @@ class BlockAllocator:
             if key is not None:
                 self._prefix_cache.pop(key, None)
             self._free.append(page)
+            self._tel.count("pool.pages_freed")
 
     def _register(self, key: bytes, page: int) -> None:
         if key not in self._prefix_cache and page not in self._page_key:
@@ -473,6 +483,7 @@ class BlockAllocator:
         worst = self.pages_for(
             self.worst_case_tokens(prompt_tokens, max_new_tokens))
         if self.available_pages < worst:
+            self._tel.count("pool.watermark_refusals")
             return None
         n0 = self.pages_for(prompt_tokens)
         pages = [self._alloc() for _ in range(n0)]
@@ -518,7 +529,12 @@ class BlockAllocator:
         fork = shared_tokens >= n_tok        # fully covered prompt
         worst_new = total - n_shared + (1 if fork else 0)
         if self.available_pages < worst_new:
+            self._tel.count("pool.watermark_refusals")
             return None
+        # Hit/miss accounting over *full* prompt pages — the unit the
+        # prefix cache shares at (partial tail pages are never cached).
+        self._tel.count("prefix_cache.page_hits", n_shared)
+        self._tel.count("prefix_cache.page_misses", n_full - n_shared)
         n0 = self.pages_for(n_tok)
         fresh = [self._alloc() for _ in range(n0 - n_shared)]
         for p in hits:
@@ -560,6 +576,7 @@ class BlockAllocator:
         new = self._alloc()
         self._decref(old)
         pages[logical_idx] = new
+        self._tel.count("pool.cow_forks")
         return old, new
 
     def rewind(self, uid: int, n_tokens: int) -> list[int]:
@@ -587,6 +604,7 @@ class BlockAllocator:
             self._owned[uid] -= 1
             self._reserved += 1
             dropped.append(p)
+        self._tel.count("pool.pages_rewound", len(dropped))
         return dropped
 
     def release(self, uid: int) -> None:

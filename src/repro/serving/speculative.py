@@ -61,6 +61,7 @@ import numpy as np
 from repro.core.salpim import SalPimEngine
 from repro.models import api as model_api
 from repro.models.config import ModelConfig
+from repro.serving.telemetry import NULL_TELEMETRY
 
 Array = jax.Array
 
@@ -162,11 +163,15 @@ class DraftModelDrafter:
     """
 
     def __init__(self, params: dict, cfg: ModelConfig,
-                 engine: SalPimEngine, max_len: int, headroom: int):
+                 engine: SalPimEngine, max_len: int, headroom: int,
+                 telemetry=None):
         if cfg.family == "encdec":
             raise ValueError("draft-model drafting unsupported for encdec")
         self.params = params
         self.cfg = cfg
+        # Draft-model streams are real work the target's verify pass
+        # amortizes; count them so telemetry can price a round honestly.
+        self._tel = telemetry if telemetry is not None else NULL_TELEMETRY
         # Drafting runs k tokens past the longest committed context.
         self.max_len = max_len + headroom
         self._decode = jax.jit(
@@ -187,11 +192,14 @@ class DraftModelDrafter:
             logits, cache = self._prefill(
                 self.params, jnp.asarray(context[None], jnp.int32))
             st = [context.copy(), cache, logits]
+            self._tel.count("spec.draft_prefills")
         else:
             _, cache, logits = st
             for t in context[len(fed):]:
                 logits, cache = self._decode(
                     self.params, jnp.asarray([t], jnp.int32), cache)
+            self._tel.count("spec.draft_decode_steps",
+                            len(context) - len(fed))
             st = [context.copy(), cache, logits]
         self._state[slot] = st
         return st
@@ -207,6 +215,7 @@ class DraftModelDrafter:
                 break          # the k-th draft needs no follow-up forward
             logits, cache = self._decode(
                 self.params, jnp.asarray([drafts[j]], jnp.int32), cache)
+        self._tel.count("spec.draft_decode_steps", max(k - 1, 0))
         # Draft-side rollback: rewind to the committed context. The
         # drafted tokens' KV stays as dead data past `lengths` until the
         # next catch-up overwrites it position by position. st[2] keeps
@@ -220,14 +229,15 @@ class DraftModelDrafter:
 
 
 def make_drafter(spec: SpecConfig, engine: SalPimEngine,
-                 max_len: int) -> Drafter:
+                 max_len: int, telemetry=None) -> Drafter:
     """Build the drafter a ServingEngine's SpecConfig asks for."""
     spec.validate()
     if spec.mode == "ngram":
         return NgramDrafter(ngram_max=spec.ngram_max,
                             ngram_min=spec.ngram_min)
     return DraftModelDrafter(spec.draft_params, spec.draft_cfg, engine,
-                             max_len=max_len, headroom=spec.k + 1)
+                             max_len=max_len, headroom=spec.k + 1,
+                             telemetry=telemetry)
 
 
 def greedy_accept(drafts: np.ndarray, greedy_tokens: np.ndarray,
