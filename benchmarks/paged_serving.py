@@ -53,6 +53,22 @@ per-request inter-token p50/p99) and a Chrome `trace_event` file
 viewable at https://ui.perfetto.dev — the baselines the SLO-scheduler
 work will regress against.
 
+Part 7 — SLO scheduling under oversubscription: a two-class workload
+(a prio-1 batch backlog submitted up front plus a trickle of prio-0
+interactive requests) drained on a deliberately undersized pool
+(~1.75x one worst-case request) under `FifoScheduler` and under
+`SloScheduler`. FIFO's watermark admission serializes the backlog and
+head-of-line-blocks the interactive class; SLO admits optimistically,
+preempts-and-swaps the lowest class when an interactive request
+arrives, and swaps it back in afterwards. Latency is *step-indexed*
+(gaps between engine steps that emitted a token, the first gap being
+queueing + TTFT), so the comparison is deterministic. Both drains must
+produce bit-identical greedy outputs; under --smoke the SLO run must
+actually preempt and swap back in, beat FIFO's interactive p99
+step-gap, and not lose goodput (fraction of interactive requests whose
+TTFT meets the deadline). Scheduler counters (sched.preempt/swap_out/
+swap_in/...), per-class latency, and goodput go to `--sched-out`.
+
 Reports, per engine: decode steps to drain, wall time (first step
 excluded as compile warmup), generated tokens/sec, KV bytes
 provisioned, prefill tokens, and peak pages. `--json PATH` (default
@@ -72,6 +88,8 @@ and 6's paged engines from int8 pools.
         --kv-cache-dtype int8 --parts 1,2,5
     PYTHONPATH=src python benchmarks/paged_serving.py --smoke --parts 6 \
         --trace-out trace.json --metrics-out telemetry.json
+    PYTHONPATH=src python benchmarks/paged_serving.py --smoke --parts 7 \
+        --sched-out sched.json
 """
 from __future__ import annotations
 
@@ -87,6 +105,7 @@ from repro.configs import get_config
 from repro.core.salpim import SalPimConfig, SalPimEngine
 from repro.models import api
 from repro.serving.engine import GenConfig, ServingEngine
+from repro.serving.scheduler import FifoScheduler, SloScheduler
 from repro.serving.speculative import SpecConfig
 from repro.serving.telemetry import Telemetry, bench_metadata
 
@@ -574,6 +593,161 @@ def _part6(params, cfg, engine, gen, *, slots, max_len, requests,
             "trace_events": n_events}
 
 
+def _slo_arrivals(rng, vocab, n, max_len):
+    """Part 7's oversubscribed mixed-priority schedule: a backlog of
+    long batch requests (priority 1) lands at step 0; short interactive
+    requests (priority 0) trickle in afterwards, one every three steps.
+    Returns [(step, priority, prompt, max_new), ...]."""
+    n_batch = max(3, n // 2)
+    n_int = max(3, n - n_batch)
+    arrivals = []
+    for _ in range(n_batch):
+        plen = int(rng.randint(max_len // 4, max_len // 2 + 1))
+        new = min(int(rng.randint(max_len // 4, max_len // 2 + 1)),
+                  max_len - plen)
+        arrivals.append((0, 1, rng.randint(2, vocab, size=plen), new))
+    for i in range(n_int):
+        plen = int(rng.randint(3, max(4, max_len // 8) + 1))
+        arrivals.append((2 + 3 * i, 0, rng.randint(2, vocab, size=plen),
+                         max(2, max_len // 8)))
+    return arrivals
+
+
+def _drain_stepwise(eng, arrivals, max_steps):
+    """Submit per the arrival schedule and record, per request, the step
+    index of every token emission. All latency numbers downstream are
+    *step-indexed* — deterministic scheduling quality, independent of
+    host wall-clock noise, so the smoke gate cannot flake. Returns
+    {uid: {"prio", "submit_step", "emits", "tokens"}} in submit order."""
+    info = {}
+    reqs = {}
+    pending = sorted(arrivals, key=lambda a: a[0])
+    step = 0
+    while (pending or eng.queue or eng.swapped
+           or any(a is not None for a in eng.active)):
+        while pending and pending[0][0] <= step:
+            _, prio, p, n = pending.pop(0)
+            uid = eng.submit(p.copy(), max_new_tokens=n, priority=prio)
+            info[uid] = {"prio": prio, "submit_step": step, "emits": []}
+            reqs[uid] = eng.queue[-1]
+        if step >= max_steps:
+            raise _not_drained(eng, max_steps)
+        eng.step()
+        step += 1
+        for uid, r in reqs.items():
+            while len(info[uid]["emits"]) < len(r.generated):
+                info[uid]["emits"].append(step)
+    for uid, r in reqs.items():
+        info[uid]["tokens"] = list(r.generated)
+    return info
+
+
+def _gap_stats(info, prio, deadline_steps):
+    """Per-class step-gap percentiles + goodput. Gaps are diffs over
+    [submit_step, emit steps...]: the first gap is time-to-first-token
+    (where queueing and preemption policy actually show up), the rest
+    are inter-token stalls."""
+    gaps, ttfts = [], []
+    for rec in info.values():
+        if rec["prio"] != prio or not rec["emits"]:
+            continue
+        seq = [rec["submit_step"]] + rec["emits"]
+        gaps += [b - a for a, b in zip(seq, seq[1:])]
+        ttfts.append(rec["emits"][0] - rec["submit_step"])
+    p50, p99 = np.percentile(np.asarray(gaps), [50, 99], method="higher")
+    good = sum(1 for t in ttfts if t <= deadline_steps)
+    return {"p50_gap_steps": int(p50), "p99_gap_steps": int(p99),
+            "ttft_steps": ttfts, "goodput": good / max(len(ttfts), 1)}
+
+
+def _part7(params, cfg, engine, gen, *, slots, max_len, requests,
+           page_size, seed, max_steps, smoke, kv_cache_dtype="model",
+           sched_out=None):
+    """SLO scheduling under oversubscription: FIFO watermark admission
+    vs preempt-and-swap, identical arrivals.
+
+    The pool is sized to ~1.75x one worst-case request, so the batch
+    backlog oversubscribes it: FIFO's worst-case reservations serialize
+    the batch class and head-of-line-block every interactive request
+    behind it, while the SLO policy admits optimistically, skips blocked
+    candidates, and preempts/swaps batch slots when an interactive
+    request lands. Latency is measured in *steps* (deterministic — see
+    `_drain_stepwise`); the headline is the interactive class's p99
+    step gap and its goodput (TTFT within a deadline) under each
+    policy. Asserts (always) that per-request greedy outputs are
+    bit-identical across policies — scheduling moves work, never
+    changes tokens — and under --smoke that the SLO policy actually
+    preempted-and-swapped, beat FIFO's interactive p99, and matched or
+    beat its goodput. The SLO engine's scheduler-decision counters
+    (sched.preempt/swap_out/swap_in/...) are exported to `sched_out`."""
+    rng = np.random.RandomState(seed + 7)
+    arrivals = _slo_arrivals(rng, cfg.vocab, max(requests, 6), max_len)
+    # 1.75x one worst-case request (max_len tokens), plus the trash page:
+    # any single request fits alone, the backlog cannot all fit at once.
+    num_pages = 1 + int(1.75 * -(-max_len // page_size))
+    deadline = max(4, max_len // 4)
+    tel = Telemetry(enabled=True)
+    results, infos, engines = {}, {}, {}
+    for label, sched, t in [("fifo", None, None),
+                            ("slo", SloScheduler(), tel)]:
+        eng = ServingEngine(
+            params, cfg, engine, slots=slots, max_len=max_len, gen=gen,
+            paged=True, page_size=page_size, num_pages=num_pages,
+            prefix_sharing=True, kv_cache_dtype=kv_cache_dtype,
+            scheduler=sched, telemetry=t)
+        infos[label] = _drain_stepwise(eng, arrivals, max_steps)
+        results[label] = _gap_stats(infos[label], prio=0,
+                                    deadline_steps=deadline)
+        engines[label] = eng
+        st = _gap_stats(infos[label], prio=1, deadline_steps=deadline)
+        print(f"{label:>14}: interactive p50/p99 gap "
+              f"{results[label]['p50_gap_steps']}/"
+              f"{results[label]['p99_gap_steps']} steps, goodput "
+              f"{results[label]['goodput']:.0%} (TTFT <= {deadline} "
+              f"steps); batch p99 gap {st['p99_gap_steps']} steps")
+    assert ([infos["fifo"][u]["tokens"] for u in sorted(infos["fifo"])]
+            == [infos["slo"][u]["tokens"] for u in sorted(infos["slo"])]), \
+        "scheduling policy changed greedy outputs"
+    slo_eng = engines["slo"]
+    sched_counters = tel.snapshot().get("scheduler", {})
+    print(f"{'slo decisions':>14}: {slo_eng.preemptions} preemptions, "
+          f"{slo_eng.swap_outs} swap-outs / {slo_eng.swap_ins} swap-ins, "
+          f"swap tier peak {slo_eng.swap_tier.bytes_peak / 1e6:.2f} MB, "
+          f"pool {num_pages - 1} usable pages")
+    if sched_out:
+        payload = {
+            "scheduler_counters": sched_counters,
+            "interactive": {label: {k: v for k, v in r.items()
+                                    if k != "ttft_steps"}
+                            for label, r in results.items()},
+            "deadline_steps": deadline,
+            "preemptions": slo_eng.preemptions,
+            "swap_outs": slo_eng.swap_outs,
+            "swap_ins": slo_eng.swap_ins,
+            "swap_bytes_peak": slo_eng.swap_tier.bytes_peak,
+            "meta": bench_metadata(),
+        }
+        with open(sched_out, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {sched_out}")
+    if smoke:
+        assert slo_eng.preemptions > 0 and slo_eng.swap_ins > 0, \
+            "part 7 workload failed to force preempt-and-swap"
+        assert (results["slo"]["p99_gap_steps"]
+                < results["fifo"]["p99_gap_steps"]), (
+            f"SLO p99 gap {results['slo']['p99_gap_steps']} steps did not "
+            f"beat FIFO {results['fifo']['p99_gap_steps']}")
+        assert results["slo"]["goodput"] >= results["fifo"]["goodput"], (
+            results["slo"]["goodput"], results["fifo"]["goodput"])
+    return {"p99_gap_steps_fifo": results["fifo"]["p99_gap_steps"],
+            "p99_gap_steps_slo": results["slo"]["p99_gap_steps"],
+            "goodput_fifo": results["fifo"]["goodput"],
+            "goodput_slo": results["slo"]["goodput"],
+            "preemptions": slo_eng.preemptions,
+            "swap_ins": slo_eng.swap_ins}
+
+
 def _part3(cfg, engine, gen, *, max_len, page_size, seed, max_steps, smoke,
            kv_cache_dtype="model"):
     """Decode-latency jitter, one-shot ("stall") vs chunked prefill.
@@ -668,8 +842,9 @@ def _part3(cfg, engine, gen, *, max_len, page_size, seed, max_steps, smoke,
 
 def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
         page_size=16, seed=0, max_steps=10_000, smoke=False,
-        json_path=None, kv_cache_dtype="model", parts=(1, 2, 3, 4, 5, 6),
-        trace_out=None, metrics_out=None):
+        json_path=None, kv_cache_dtype="model",
+        parts=(1, 2, 3, 4, 5, 6, 7), trace_out=None, metrics_out=None,
+        sched_out=None):
     cfg = get_config(arch, smoke=True)
     engine = SalPimEngine.create(SalPimConfig())
     params = api.init_params(jax.random.PRNGKey(0), cfg)
@@ -822,6 +997,23 @@ def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
             "telemetry_trace_events": t6["trace_events"],
         })
 
+    # -- part 7: SLO scheduling under oversubscription ----------------------
+    # Step-indexed (not wall-clock) latency: deterministic, no retry
+    # needed — a failed gate is a real scheduling regression.
+    if 7 in parts:
+        t7 = _part7(params, cfg, engine, gen, slots=slots, max_len=max_len,
+                    requests=requests, page_size=page_size, seed=seed,
+                    max_steps=max_steps, smoke=smoke,
+                    kv_cache_dtype=kv_cache_dtype, sched_out=sched_out)
+        summary.update({
+            "sched_p99_gap_steps_fifo": t7["p99_gap_steps_fifo"],
+            "sched_p99_gap_steps_slo": t7["p99_gap_steps_slo"],
+            "sched_goodput_fifo": t7["goodput_fifo"],
+            "sched_goodput_slo": t7["goodput_slo"],
+            "sched_preemptions": t7["preemptions"],
+            "sched_swap_ins": t7["swap_ins"],
+        })
+
     # Every export carries its provenance: schema version, git SHA, jax
     # version, device kind — cross-PR trajectory comparisons need to know
     # what produced each number.
@@ -860,10 +1052,11 @@ def main():
                     choices=["model", "int8"],
                     help="KV pool storage for parts 1-3, 5, and 6's paged "
                          "engines (part 4 always compares model vs int8)")
-    ap.add_argument("--parts", default="1,2,3,4,5,6",
+    ap.add_argument("--parts", default="1,2,3,4,5,6,7",
                     help="comma-separated parts to run (e.g. 1,2,4 skips "
                          "the slow decode-jitter study and the "
-                         "speculative and telemetry comparisons)")
+                         "speculative, telemetry, and scheduler "
+                         "comparisons)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the headline numbers (tokens/s, prefill "
                          "tokens saved, peak pages, inter-token p50/p99, "
@@ -877,6 +1070,11 @@ def main():
                     help="part 6's metrics-snapshot JSON export (default "
                          "telemetry_smoke.json under --smoke, else "
                          "telemetry_part6.json)")
+    ap.add_argument("--sched-out", default=None, metavar="PATH",
+                    help="part 7's scheduler-counters JSON export "
+                         "(sched.* counters, per-class latency, goodput; "
+                         "default sched_smoke.json under --smoke, else "
+                         "sched_part7.json)")
     args = ap.parse_args()
     if args.smoke:
         args.requests = min(args.requests, 4)
@@ -892,12 +1090,16 @@ def main():
     if args.metrics_out is None:
         args.metrics_out = ("telemetry_smoke.json" if args.smoke
                             else "telemetry_part6.json")
+    if args.sched_out is None:
+        args.sched_out = ("sched_smoke.json" if args.smoke
+                          else "sched_part7.json")
     parts = tuple(int(p) for p in args.parts.split(",") if p)
     run(arch=args.arch, slots=args.slots, max_len=args.max_len,
         requests=args.requests, page_size=args.page_size, seed=args.seed,
         max_steps=args.max_steps, smoke=args.smoke, json_path=args.json,
         kv_cache_dtype=args.kv_cache_dtype, parts=parts,
-        trace_out=args.trace_out, metrics_out=args.metrics_out)
+        trace_out=args.trace_out, metrics_out=args.metrics_out,
+        sched_out=args.sched_out)
 
 
 if __name__ == "__main__":

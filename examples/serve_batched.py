@@ -6,6 +6,8 @@ slots (slot-based admission, per-request lengths, EOS release).
     PYTHONPATH=src python examples/serve_batched.py --paged --page-size 16
     PYTHONPATH=src python examples/serve_batched.py --paged \
         --telemetry --trace-out trace.json
+    PYTHONPATH=src python examples/serve_batched.py --paged \
+        --scheduler slo --priority --num-pages 12
 """
 import argparse
 import time
@@ -17,6 +19,7 @@ from repro.configs import get_config
 from repro.core.salpim import SalPimConfig, SalPimEngine
 from repro.models import api
 from repro.serving.engine import GenConfig, ServingEngine
+from repro.serving.scheduler import FifoScheduler, SloScheduler
 from repro.serving.telemetry import Telemetry
 
 
@@ -61,6 +64,19 @@ def main():
                          "of the serving model on its own dense cache")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="drafted tokens per verify pass")
+    ap.add_argument("--scheduler", default="fifo", choices=["fifo", "slo"],
+                    help="admission/preemption policy: 'fifo' is the "
+                         "historical strict-FIFO watermark admission "
+                         "(never preempts); 'slo' (paged only) admits "
+                         "optimistically, serves higher-priority classes "
+                         "first, and preempts-and-swaps lower classes to "
+                         "host RAM under page pressure — greedy outputs "
+                         "stay bit-identical either way")
+    ap.add_argument("--priority", action="store_true",
+                    help="mixed-class demo workload: every third request "
+                         "is interactive (class 0), the rest are batch "
+                         "(class 1); implies --telemetry and prints "
+                         "per-class inter-token p50/p99 after the drain")
     ap.add_argument("--telemetry", action="store_true",
                     help="enable the serving telemetry layer: metric "
                          "counters/gauges/histograms, per-request "
@@ -74,6 +90,8 @@ def main():
     ap.add_argument("--requests", type=int, default=10)
     args = ap.parse_args()
     if args.trace_out:
+        args.telemetry = True
+    if args.priority:
         args.telemetry = True
 
     cfg = get_config("qwen2-1.5b", smoke=True)
@@ -97,6 +115,8 @@ def main():
             speculative = SpecConfig(mode="ngram", k=args.spec_k)
 
     telemetry = Telemetry(enabled=True) if args.telemetry else None
+    scheduler = (SloScheduler() if args.scheduler == "slo"
+                 else FifoScheduler())
     eng = ServingEngine(params, cfg, engine, slots=args.slots,
                         max_len=args.max_len,
                         gen=GenConfig(temperature=0.0, stop_on_eos=False),
@@ -107,6 +127,7 @@ def main():
                         kv_cache_dtype=args.kv_cache_dtype,
                         kv_scale_dtype=args.kv_scale_dtype,
                         speculative=speculative,
+                        scheduler=scheduler,
                         telemetry=telemetry)
     rng = np.random.RandomState(0)
     shared = rng.randint(2, cfg.vocab, size=args.shared_prefix)
@@ -114,10 +135,13 @@ def main():
     for i in range(args.requests):
         prompt = rng.randint(2, cfg.vocab, size=rng.randint(4, 12))
         prompt = np.concatenate([shared, prompt])
-        uids.append(eng.submit(prompt, max_new_tokens=int(rng.randint(5, 15))))
+        prio = (0 if i % 3 == 0 else 1) if args.priority else 0
+        uids.append(eng.submit(prompt, max_new_tokens=int(rng.randint(5, 15)),
+                               priority=prio))
     mode = (f"paged (page_size={args.page_size}, "
             f"{eng.allocator.num_pages} pages, kv {eng.kv_cache_dtype})"
             if args.paged else "dense")
+    mode += f", scheduler {args.scheduler}"
     if speculative is not None:
         mode += f", speculative {args.speculative} k={args.spec_k}"
     print(f"submitted {len(uids)} requests into {args.slots} slots [{mode}]")
@@ -127,7 +151,8 @@ def main():
     while True:
         n = eng.step()
         steps += 1
-        if n == 0 and not eng.queue and all(a is None for a in eng.active):
+        if (n == 0 and not eng.queue and not eng.swapped
+                and all(a is None for a in eng.active)):
             break
     dt = time.perf_counter() - t0
     toks = sum(len(r.generated) for r in eng.finished)
@@ -149,6 +174,12 @@ def main():
               f"{st['spec_rounds']} verify rounds for {st['tokens']} "
               f"tokens ({st['verify_per_token']:.2f} rounds/token, "
               f"{st['tokens_per_pass']:.2f} tokens/round)")
+    if args.scheduler == "slo":
+        st = eng.stats()
+        print(f"scheduler: {st['preemptions']} preemptions, "
+              f"{st['swap_outs']} swap-outs / {st['swap_ins']} swap-ins, "
+              f"swap tier peak {st['swap_bytes_peak'] / 1e6:.2f} MB, "
+              f"{st['pinned_pages']} pages pinned after drain")
     if telemetry is not None:
         snap = telemetry.snapshot()
         phases = snap["steps"]["phase_sec"]
@@ -162,6 +193,20 @@ def main():
             print(f"telemetry: ttft median {ttfts[len(ttfts) // 2] * 1e3:.1f}"
                   f" ms over {len(ttfts)} requests, prefix-cache hit rate "
                   f"{snap['prefix_cache']['hit_rate']:.0%}")
+        if args.priority:
+            # Per-class latency straight off the snapshot: the tracer
+            # feeds one histogram per scheduling class
+            # (latency.inter_token_sec.class{p}).
+            hists = snap["histograms"]
+            prefix = "latency.inter_token_sec.class"
+            for key in sorted(k for k in hists if k.startswith(prefix)):
+                h = hists[key]
+                label = {"0": "interactive", "1": "batch"}.get(
+                    key[len(prefix):], f"class {key[len(prefix):]}")
+                print(f"telemetry: {label:<11} inter-token "
+                      f"p50 {h['p50'] * 1e3:.1f} ms / "
+                      f"p99 {h['p99'] * 1e3:.1f} ms "
+                      f"({h['total']} gaps)")
         if args.trace_out:
             n = telemetry.export_chrome_trace(args.trace_out)
             print(f"telemetry: wrote {args.trace_out} ({n} trace events, "

@@ -29,6 +29,7 @@ from repro.models import api as model_api
 from repro.serving import kvcache as kv
 from repro.models.config import ModelConfig
 from repro.serving.sampling import sample
+from repro.serving.scheduler import FifoScheduler, Scheduler, SwappedRequest
 from repro.serving.speculative import SpecConfig, greedy_accept, make_drafter
 from repro.serving.telemetry import NULL_TELEMETRY, Telemetry
 
@@ -127,6 +128,10 @@ class Request:
     # request and how many the target's verify pass accepted.
     proposed: int = 0
     accepted: int = 0
+    # Scheduling class (lower = more urgent; FIFO ignores it) and how
+    # many times this request was preempted off its slot.
+    priority: int = 0
+    preemptions: int = 0
 
     @property
     def prefilling(self) -> bool:
@@ -188,6 +193,16 @@ class ServingEngine:
     off; mid-prefill slots never speculate (they are not in the decode
     batch until their prompt cursor finishes).
 
+    `scheduler=` (serving/scheduler.py) selects the admission /
+    prefill-ordering / preemption policy. The default `FifoScheduler`
+    reproduces the historical engine bit-identically: strict FIFO under
+    watermark admission, no preemption. `SloScheduler` adds priority
+    classes (`submit(priority=...)`), optimistic (non-worst-case)
+    admission, and preempt-and-swap over the host tier
+    (`kvcache.HostSwapTier`) when the pool runs dry — swapped-then-
+    restored slots continue bit-identically, and any schedule that
+    never preempts keeps greedy outputs bit-identical to FIFO.
+
     `telemetry=Telemetry(enabled=True)` (serving/telemetry.py) attaches
     the observability layer: per-step phase records (admit / chunk
     prefill / draft / verify / decode), pool occupancy + watermark
@@ -208,6 +223,7 @@ class ServingEngine:
                  kv_cache_dtype: Optional[str] = None,
                  kv_scale_dtype: str = "float32",
                  speculative: Optional[SpecConfig] = None,
+                 scheduler: Optional[Scheduler] = None,
                  telemetry: Optional[Telemetry] = None, seed: int = 0):
         self.params = params
         self.cfg = model_cfg
@@ -216,9 +232,22 @@ class ServingEngine:
         self.max_len = max_len
         self.gen = gen
         self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
+        self.scheduler = scheduler if scheduler is not None else FifoScheduler()
+        if self.scheduler.preemptive and not paged:
+            raise ValueError(
+                "preemptive scheduling requires paged=True: preemption "
+                "swaps pool pages to the host tier, which the dense "
+                "backend does not have")
         self.queue: list[Request] = []
         self.active: list[Optional[Request]] = [None] * slots
         self.finished: list[Request] = []
+        # Preempted requests parked off-device (scheduler.SwappedRequest)
+        # and the host-RAM tier holding their exact KV payloads.
+        self.swapped: list[SwappedRequest] = []
+        self.swap_tier = kv.HostSwapTier()
+        self.preemptions = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
         self.last_logits = jnp.zeros((slots, model_cfg.vocab), jnp.float32)
         self._uid = 0
         self._key = jax.random.PRNGKey(seed)
@@ -313,7 +342,8 @@ class ServingEngine:
                 num_pages = budget // self.page_bytes + 1
             self.allocator = kv.BlockAllocator(
                 num_pages, page_size, prefix_sharing=prefix_sharing,
-                telemetry=self.telemetry)
+                telemetry=self.telemetry,
+                pin_budget_pages=self.scheduler.pin_budget_pages)
             self.cache = model_api.init_paged_cache(
                 model_cfg, slots, num_pages, page_size, max_pages,
                 kv_dtype=resolved_kv, kv_scale_dtype=kv_scale_dtype)
@@ -366,8 +396,11 @@ class ServingEngine:
                 p, toks, bt, st, kp, vp, model_cfg, engine, ksc, vsc),
             donate_argnums=(4, 5, 6, 7))
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               priority: int = 0) -> int:
         prompt = np.asarray(prompt)
+        if priority < 0:
+            raise ValueError(f"priority must be >= 0, got {priority}")
         # Both backends size their cache (arena / block-table width) for
         # max_len tokens; writes past it would be silently dropped. The
         # chunked prefill path makes no difference to the worst case —
@@ -395,92 +428,238 @@ class ServingEngine:
                     f"request needs {need} pages worst case but the pool "
                     f"has {usable}; no reservation was made")
         self._uid += 1
-        self.queue.append(Request(self._uid, prompt, max_new_tokens))
+        self.queue.append(Request(self._uid, prompt, max_new_tokens,
+                                  priority=priority))
         self.telemetry.request_submitted(self._uid, len(prompt),
-                                         max_new_tokens)
+                                         max_new_tokens, priority=priority)
         return self._uid
 
-    def _admit(self):
+    # -- placement / preemption mechanisms (policy lives in scheduler.py) ---
+    def _place_paged(self, slot: int, req: Request, shared_tokens: int):
+        """Install an admitted request into a paged slot. The allocator
+        already mapped its prompt pages; the prompt's KV is produced
+        chunk-by-chunk by _prefill_tick. A shared prefix just advances
+        the cursor (a fully covered prompt recomputes its last token so
+        its logits can feed sampling; that chunk COW-forks the shared
+        page it writes into)."""
+        req.shared_prompt_tokens = shared_tokens
+        req.prefill_cursor = min(shared_tokens, len(req.prompt) - 1)
+        self.prefill_tokens_saved += req.prefill_cursor
+        self._host_len[slot] = 0
+        self.telemetry.request_admitted(req.uid, slot, shared_tokens)
+        self.active[slot] = req
+
+    def _place_dense(self, slot: int, req: Request):
+        """Install a request into a dense slot: whole-prompt prefill in
+        one jitted program, scattered into the slot's arena rows."""
         tel = self.telemetry
-        for slot in range(self.slots):
-            if self.active[slot] is None and self.queue:
-                req = self.queue[0]
-                if self.paged:
-                    # Watermark admission: worst-case pages (net of any
-                    # shared prefix pages) must be reservable, else the
-                    # whole FIFO waits (no skip — later short requests
-                    # must not starve the head). admit_tokens mutates no
-                    # state on refusal, so a waiting head reserves
-                    # nothing.
-                    res = self.allocator.admit_tokens(
-                        req.uid, req.prompt, req.max_new_tokens)
-                    if res is None:
-                        # One blocked-step event per engine step the
-                        # FIFO head waits at the watermark (head-of-line
-                        # blocking, visible in the snapshot).
-                        tel.count("admission.blocked_steps")
-                        if not any(r is not None for r in self.active):
-                            # Nothing holds pages, yet the head still
-                            # doesn't fit: it never will (submit() bounds
-                            # gross worst case, so this is a safety net).
-                            worst = self.allocator.pages_for(
-                                self.allocator.worst_case_tokens(
-                                    len(req.prompt), req.max_new_tokens))
-                            raise ValueError(
-                                f"request {req.uid} needs {worst} pages; "
-                                f"pool has {self.allocator.num_pages - 1}")
-                        break
-                self.queue.pop(0)
-                if self.paged:
-                    # Reserve + map prompt pages only; the prompt's KV is
-                    # produced chunk-by-chunk by _prefill_tick. A shared
-                    # prefix just advances the cursor (a fully covered
-                    # prompt recomputes its last token so its logits can
-                    # feed sampling; that chunk COW-forks the shared
-                    # page it writes into).
-                    _, shared_tokens = res
-                    req.shared_prompt_tokens = shared_tokens
-                    req.prefill_cursor = min(shared_tokens,
+        tel.request_admitted(req.uid, slot, 0)
+        t0c = tel.now() if tel.enabled else 0.0
+        with tel.annotation("dense_admit_prefill"):
+            self.cache, self.last_logits = self._dense_admit(
+                self.params, jnp.asarray(req.prompt[None]),
+                jnp.int32(slot), self.cache, self.last_logits)
+        if tel.enabled:
+            # Dense admission prefills the whole prompt in one program:
+            # record it as a single chunk span.
+            tel.chunk(req.uid, t0c, tel.now(), len(req.prompt))
+        self.prefill_tokens += len(req.prompt)
+        req.prefill_cursor = len(req.prompt)
+        self._host_len[slot] = len(req.prompt)
+        self.active[slot] = req
+
+    def _admit_queued(self, req: Request, slot: int,
+                      reserve: bool = True) -> bool:
+        """Try to admit a queued request (paged) into `slot`; False when
+        the pool refuses. Used by skip-capable schedulers — `req` need
+        not be the queue head."""
+        res = self.allocator.admit_tokens(
+            req.uid, req.prompt, req.max_new_tokens, reserve=reserve)
+        if res is None:
+            return False
+        self.queue.remove(req)
+        self._place_paged(slot, req, res[1])
+        return True
+
+    def _preemptable(self, slot: int) -> bool:
+        """A decoding slot can always be preempted (its pages are fully
+        written through host_len, so the swap blob is exact). A
+        mid-prefill slot can only be *aborted*, and only while no sharer
+        holds its registered pages — pages past the borrowed prefix with
+        refcount > 1 are content other admitted requests mapped and are
+        still waiting for this donor to write."""
+        req = self.active[slot]
+        if req is None:
+            return False
+        if not req.prefilling:
+            return True
+        a = self.allocator
+        borrowed = req.shared_prompt_tokens // a.page_size
+        return all(a.refcount(p) <= 1
+                   for p in a.pages_of(req.uid)[borrowed:])
+
+    def _prefix_ready(self, slot: int) -> bool:
+        """True when every prefix page this slot borrowed at admission
+        has been fully written by its registrant — i.e. no active
+        mid-prefill request still owes content to a page this slot
+        mapped. Schedulers that reorder prefill (SLO) must not chunk a
+        sharer before this holds; FIFO's strict uid order implies it."""
+        req = self.active[slot]
+        if req is None or req.shared_prompt_tokens == 0:
+            return True
+        a = self.allocator
+        ps = a.page_size
+        borrowed = set(a.pages_of(req.uid)[:req.shared_prompt_tokens // ps])
+        for r in self.active:
+            if r is None or r is req or not r.prefilling:
+                continue
+            own_from = r.shared_prompt_tokens // ps
+            pages = a.pages_of(r.uid)
+            for j in range(own_from, len(pages)):
+                if pages[j] in borrowed and r.prefill_cursor < (j + 1) * ps:
+                    return False
+        return True
+
+    def _preempt(self, slot: int):
+        """Preempt-and-swap mechanism. Decoding victims: gather their
+        pages (payload + scale rows, bit-exact) to the host tier, save
+        the logits row sampling resumes from, release the device pages.
+        Mid-prefill victims are *aborted* instead — their pages are not
+        all fully written, so a blob could capture garbage; prefill is
+        recomputed on re-admission. Either way the drafter's per-slot
+        state is dropped (the slot id will be reused) and the request
+        joins `self.swapped` for the scheduler to re-admit."""
+        req = self.active[slot]
+        tel = self.telemetry
+        a = self.allocator
+        if req.prefilling:
+            # Unregister the incompletely written pages this request
+            # registered at admission (sharers are excluded by
+            # _preemptable), take back the saved-prefill credit, and
+            # reset the cursor for a fresh prefill on re-admission.
+            a.unregister(req.uid,
+                         from_logical=req.shared_prompt_tokens // a.page_size)
+            self.prefill_tokens_saved -= min(req.shared_prompt_tokens,
                                              len(req.prompt) - 1)
-                    self.prefill_tokens_saved += req.prefill_cursor
-                    self._host_len[slot] = 0
-                    tel.request_admitted(req.uid, slot, shared_tokens)
-                else:
-                    tel.request_admitted(req.uid, slot, 0)
-                    t0c = tel.now() if tel.enabled else 0.0
-                    with tel.annotation("dense_admit_prefill"):
-                        self.cache, self.last_logits = self._dense_admit(
-                            self.params, jnp.asarray(req.prompt[None]),
-                            jnp.int32(slot), self.cache, self.last_logits)
-                    if tel.enabled:
-                        # Dense admission prefills the whole prompt in
-                        # one program: record it as a single chunk span.
-                        tel.chunk(req.uid, t0c, tel.now(), len(req.prompt))
-                    self.prefill_tokens += len(req.prompt)
-                    req.prefill_cursor = len(req.prompt)
-                    self._host_len[slot] = len(req.prompt)
-                self.active[slot] = req
-        if self.paged:
-            self.peak_pages = max(self.peak_pages,
-                                  self.allocator.used_pages)
+            req.prefill_cursor = 0
+            req.shared_prompt_tokens = 0
+            entry = SwappedRequest(req, 0)
+            self.cache = self._kv.clear_slot(self.cache, slot)
+        else:
+            n_kv = int(self._host_len[slot])
+            ids = a.pages_of(req.uid)
+            self.cache, blob = self._kv.swap_out_slot(
+                self.cache, slot, ids, n_kv)
+            self.swap_tier.put(req.uid, blob)
+            entry = SwappedRequest(req, n_kv,
+                                   logits=np.asarray(self.last_logits[slot]),
+                                   has_blob=True)
+            req.shared_prompt_tokens = 0
+            self.swap_outs += 1
+            tel.count("sched.swap_out")
+            tel.count("sched.swap_out_pages", len(ids))
+        a.release(req.uid)
+        self.active[slot] = None
+        self._host_len[slot] = 0
+        if self.drafter is not None:
+            # Preempted slots drop drafter state: the slot id is about
+            # to be reused; a draft-model drafter re-prefills its own
+            # cache from the request context on re-contact.
+            self.drafter.release(slot)
+        req.preemptions += 1
+        self.preemptions += 1
+        tel.count("sched.preempt")
+        self.swapped.append(entry)
+
+    def _swap_in(self, entry: SwappedRequest, slot: int,
+                 reserve: bool = True) -> bool:
+        """Re-admit a preempted request. Aborted mid-prefill entries go
+        through a fresh paged admission (prefill recomputed, prefix
+        cache may re-hit); swapped decoding entries get fresh pages and
+        their exact payload restored from the host tier, resuming
+        bit-identically. False when the pool refuses."""
+        req = entry.req
+        a = self.allocator
+        tel = self.telemetry
+        if not entry.has_blob:
+            res = a.admit_tokens(req.uid, req.prompt, req.max_new_tokens,
+                                 reserve=reserve)
+            if res is None:
+                return False
+            self.swapped.remove(entry)
+            self._place_paged(slot, req, res[1])
+            tel.count("sched.readmit")
+            return True
+        n_map = a.pages_for(entry.n_kv)
+        worst = a.pages_for(a.worst_case_tokens(len(req.prompt),
+                                                req.max_new_tokens))
+        pages = a.admit_restored(req.uid, n_map, worst, reserve=reserve)
+        if pages is None:
+            return False
+        blob = self.swap_tier.pop(req.uid)
+        self.cache = self._kv.swap_in_slot(self.cache, slot, pages, blob)
+        self.last_logits = self.last_logits.at[slot].set(
+            jnp.asarray(entry.logits))
+        self._host_len[slot] = entry.n_kv
+        self.active[slot] = req
+        self.swapped.remove(entry)
+        self.swap_ins += 1
+        tel.count("sched.swap_in")
+        tel.count("sched.swap_in_pages", n_map)
+        return True
+
+    def _ensure_decode_capacity(self):
+        """Optimistic (non-reserved) scheduling: before sampling, make
+        sure the free list covers every page the coming decode (or
+        verify) round may map — one extend per slot crossing a page
+        boundary (k+1 candidate positions with speculation) plus one
+        fork where the write lands in a still-shared page. Reclaims
+        pinned pages first, then preempts victims; runs before sampling
+        so a victim's state is a clean resume point."""
+        a = self.allocator
+        ps = a.page_size
+        span = 1 + (self.spec.k if self.spec is not None else 0)
+        while True:
+            need = 0
+            for i, r in enumerate(self.active):
+                if r is None or r.prefilling:
+                    continue
+                L = int(self._host_len[i])
+                pages = a.pages_of(r.uid)
+                need += max(a.pages_for(L + span) - len(pages), 0)
+                logical = L // ps
+                if logical < len(pages) and a.refcount(pages[logical]) > 1:
+                    need += 1
+            if a.free_pages >= need:
+                return
+            a.reclaim_pinned(need - a.free_pages)
+            if a.free_pages >= need:
+                return
+            victim = self.scheduler.pick_victim(self, None)
+            if victim is None:
+                return
+            self._preempt(victim)
 
     def _prefill_tick(self):
-        """Run at most one prompt chunk (token-budgeted) for the oldest
-        mid-prefill slot. The chunk's K/V goes straight into the slot's
-        reserved pool pages; earlier chunks are read back through the
-        block table. The slot joins the decode batch only when the
-        cursor reaches the end of the prompt.
+        """Run at most one prompt chunk (token-budgeted) for one
+        mid-prefill slot — which one is the scheduler's call
+        (`select_prefill_slot`; FIFO = oldest uid). The chunk's K/V goes
+        straight into the slot's pool pages; earlier chunks are read
+        back through the block table. The slot joins the decode batch
+        only when the cursor reaches the end of the prompt.
 
-        Slots prefill strictly in admission (uid) order. That makes the
-        allocator's registration-at-admission of prefix-cache pages safe:
-        a later request that maps a donor's pages cannot run its own
-        first chunk — let alone decode — until the donor's whole prompt
-        (every shared page's contents) has been written."""
+        Under FIFO, slots prefill strictly in admission (uid) order.
+        That makes the allocator's registration-at-admission of
+        prefix-cache pages safe: a later request that maps a donor's
+        pages cannot run its own first chunk — let alone decode — until
+        the donor's whole prompt (every shared page's contents) has been
+        written. Reordering schedulers must enforce the same invariant
+        through `_prefix_ready`."""
         cand = [(r.uid, i) for i, r in enumerate(self.active)
                 if r is not None and r.prefilling]
         if not cand:
             return
-        _, slot = min(cand)
+        slot = self.scheduler.select_prefill_slot(self, cand)
         req = self.active[slot]
         start = req.prefill_cursor
         budget = self.prefill_chunk_tokens or len(req.prompt)
@@ -494,7 +673,25 @@ class ServingEngine:
         # writing them is safe at any refcount, because the write is
         # precisely the registered content later sharers mapped.
         borrowed = req.shared_prompt_tokens // ps
-        for logical in range(start // ps, min((end - 1) // ps + 1, borrowed)):
+        fork_range = range(start // ps, min((end - 1) // ps + 1, borrowed))
+        if self.scheduler.preemptive:
+            # Optimistic admission reserves nothing ahead: make sure the
+            # free list covers this chunk's COW forks before issuing
+            # them, preempting victims (never this slot) if dry.
+            forks = sum(
+                1 for logical in fork_range
+                if self.allocator.refcount(
+                    self.allocator.pages_of(req.uid)[logical]) > 1)
+            if forks > self.allocator.free_pages:
+                self.allocator.reclaim_pinned(
+                    forks - self.allocator.free_pages)
+            while forks > self.allocator.free_pages:
+                victim = self.scheduler.pick_victim(
+                    self, None, protect=frozenset((slot,)))
+                if victim is None:
+                    return   # retry next step
+                self._preempt(victim)
+        for logical in fork_range:
             page = self.allocator.pages_of(req.uid)[logical]
             if self.allocator.refcount(page) > 1:
                 old, new = self.allocator.fork_page(req.uid, logical)
@@ -608,20 +805,25 @@ class ServingEngine:
     def _step_inner(self) -> int:
         tel = self.telemetry
         t = time.perf_counter()
-        self._admit()
+        self.scheduler.schedule_admissions(self)
         self._admit_sec += time.perf_counter() - t
         if self.paged:
             t = time.perf_counter()
             self._prefill_tick()
             self._chunk_sec += time.perf_counter() - t
+            if self.scheduler.preemptive:
+                # Optimistic admission: the pool must cover this round's
+                # page extends/forks before sampling (may preempt).
+                self._ensure_decode_capacity()
         n_prefilling = sum(1 for r in self.active
                            if r is not None and r.prefilling)
         ready = [i for i, r in enumerate(self.active)
                  if r is not None and not r.prefilling]
+        parked = len(self.queue) + len(self.swapped)
         if not ready:
-            return n_prefilling + len(self.queue)
+            return n_prefilling + parked
         if self.spec is not None:
-            return self._spec_round(ready) + n_prefilling + len(self.queue)
+            return self._spec_round(ready) + n_prefilling + parked
         t_dec = time.perf_counter()
         self._key, step_key = jax.random.split(self._key)
         toks = sample(self.last_logits, step_key,
@@ -661,7 +863,7 @@ class ServingEngine:
         # (decode_step freezes zero-length slots on device too).
         self._host_len += mask
         self._decode_sec += time.perf_counter() - t_dec
-        return int(mask.sum()) + n_prefilling + len(self.queue)
+        return int(mask.sum()) + n_prefilling + parked
 
     def _spec_round(self, ready: list[int]) -> int:
         """One draft-verify round over the fully-prefilled slots.
@@ -815,7 +1017,8 @@ class ServingEngine:
         start = len(self.finished)
         for _ in range(max_steps):
             n = self.step()
-            if n == 0 and not self.queue and all(a is None for a in self.active):
+            if (n == 0 and not self.queue and not self.swapped
+                    and all(a is None for a in self.active)):
                 break
         return self.finished[start:]
 
@@ -845,31 +1048,53 @@ class ServingEngine:
         model_sec_per_token charges only the model-stream phases
         (decode + verify), so host-side draft time no longer inflates
         the decode metric.
+
+        Every ratio field reports 0.0 when its denominator is zero (an
+        empty or all-rejected drain) instead of dividing step time by a
+        fake one-token floor — `_ratio` below, regression-tested.
+
+        Scheduler fields: `scheduler` (policy name), `preemptions` /
+        `swap_outs` / `swap_ins` (lifetime decision counts), `swapped`
+        (requests parked off-device right now), `swap_bytes_peak` (host
+        tier high-water mark), `pinned_pages` (prefix pages alive at
+        refcount 0 right now).
         """
-        reqs = self.finished + [r for r in self.active if r is not None]
+        def _ratio(num, den):
+            return num / den if den else 0.0
+
+        reqs = (self.finished + [r for r in self.active if r is not None]
+                + [e.req for e in self.swapped])
         tokens = sum(len(r.generated) for r in reqs)
         spec_tokens = tokens if self.spec is not None else 0
         return {
             "tokens": tokens,
             "tokens_budget": sum(r.max_new_tokens for r in reqs),
-            "sec_per_token": self._step_sec / max(tokens, 1),
+            "sec_per_token": _ratio(self._step_sec, tokens),
             "step_sec": self._step_sec,
             "admit_sec": self._admit_sec,
             "chunk_prefill_sec": self._chunk_sec,
             "draft_sec": self._draft_sec,
             "verify_sec": self._verify_sec,
             "decode_sec": self._decode_sec,
-            "model_sec_per_token": (self._decode_sec + self._verify_sec)
-            / max(tokens, 1),
+            "model_sec_per_token": _ratio(
+                self._decode_sec + self._verify_sec, tokens),
             "prefill_tokens": self.prefill_tokens,
             "prefill_tokens_saved": self.prefill_tokens_saved,
             "peak_pages": self.peak_pages,
             "proposed": self.spec_proposed,
             "accepted": self.spec_accepted,
-            "acceptance_rate": self.spec_accepted / max(self.spec_proposed,
-                                                        1),
+            "acceptance_rate": _ratio(self.spec_accepted,
+                                      self.spec_proposed),
             "verify_passes": self.verify_passes,
             "spec_rounds": self.spec_rounds,
-            "verify_per_token": self.spec_rounds / max(spec_tokens, 1),
-            "tokens_per_pass": spec_tokens / max(self.spec_rounds, 1),
+            "verify_per_token": _ratio(self.spec_rounds, spec_tokens),
+            "tokens_per_pass": _ratio(spec_tokens, self.spec_rounds),
+            "scheduler": self.scheduler.name,
+            "preemptions": self.preemptions,
+            "swap_outs": self.swap_outs,
+            "swap_ins": self.swap_ins,
+            "swapped": len(self.swapped),
+            "swap_bytes_peak": self.swap_tier.bytes_peak,
+            "pinned_pages": (self.allocator.pinned_pages
+                             if self.paged else 0),
         }

@@ -81,6 +81,31 @@ Speculative rollback (draft-verify serving):
   page is dead — reads are length-masked and decode appends overwrite
   it (and, in int8 mode, its scale-row entries) position by position.
 
+Tiered page store (preempt-and-swap scheduling):
+
+  The device pool is tier 0 of a two-tier store. `swap_out_slot`
+  gathers a slot's page payloads — K/V and, in int8 mode, their scale
+  rows, bit-exact — into a host-RAM `SwappedKV` blob (`HostSwapTier`
+  keys blobs by uid with byte accounting) and clears the slot; the
+  allocator then releases the device pages. `swap_in_slot` restores the
+  blob into freshly allocated pages (`BlockAllocator.admit_restored`)
+  and reinstates the block-table row and device length, so a preempted
+  sequence continues bit-identically to one that was never swapped.
+  Restored pages are private (refcount 1, never prefix-registered).
+
+  Two admission modes support the scheduler split
+  (`serving/scheduler.py`): `reserve=True` (default) is the historical
+  watermark — worst-case pages promised up front, decode can never run
+  dry, no preemption. `reserve=False` is *optimistic*: only the pages
+  needed now must be free, nothing is promised, and `extend`/`fork_page`
+  draw straight from the free list — the engine must keep enough pages
+  free (preempting victims when the pool runs dry) before every write
+  round. `pin_budget_pages > 0` additionally lets up to that many
+  prefix-cache pages survive refcount 0 ("pinned": out of the free
+  list, still content-addressable); a later admission revives a pinned
+  page at refcount 1, and `reclaim_pinned` evicts oldest-first when the
+  pool needs the bytes back.
+
 The Pallas kernels that read this layout through a scalar-prefetched
 block table are `kernels/paged_attention.py` (decode) and
 `kernels/paged_prefill.py` (chunked prefill).
@@ -355,6 +380,108 @@ def rewind_slot(cache: PagedCache, slot: int, new_len: int,
     )
 
 
+@dataclasses.dataclass
+class SwappedKV:
+    """One preempted slot's KV payload, gathered to host RAM.
+
+    The swap tier's unit: page-major copies of the device pools
+    restricted to the slot's pages — K/V payloads and, in int8 mode,
+    their scale rows, bit-exact — so a restored slot continues exactly
+    as if it had never left the device.
+
+    n_tokens: valid tokens the pages held at swap-out
+    k, v:     (L, n_pages, Hkv, page_size, Dh) numpy, pool dtype
+    k_scale, v_scale: (L, n_pages, Hkv, page_size) or None (fp mode)
+    """
+
+    n_tokens: int
+    k: np.ndarray
+    v: np.ndarray
+    k_scale: Optional[np.ndarray] = None
+    v_scale: Optional[np.ndarray] = None
+
+    @property
+    def n_pages(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        n = self.k.nbytes + self.v.nbytes
+        if self.k_scale is not None:
+            n += self.k_scale.nbytes + self.v_scale.nbytes
+        return n
+
+
+class HostSwapTier:
+    """Host-RAM tier of the page store: swapped-out slots' `SwappedKV`
+    blobs keyed by request uid, with byte accounting for gauges."""
+
+    def __init__(self):
+        self._blobs: dict[int, SwappedKV] = {}
+        self.bytes_peak = 0
+
+    def __len__(self) -> int:
+        return len(self._blobs)
+
+    @property
+    def bytes_used(self) -> int:
+        return sum(b.nbytes for b in self._blobs.values())
+
+    def put(self, uid: int, blob: SwappedKV) -> None:
+        assert uid not in self._blobs, f"uid {uid} already swapped"
+        self._blobs[uid] = blob
+        self.bytes_peak = max(self.bytes_peak, self.bytes_used)
+
+    def pop(self, uid: int) -> SwappedKV:
+        return self._blobs.pop(uid)
+
+
+def swap_out_slot(cache: PagedCache, slot: int, page_ids: list[int],
+                  n_tokens: int) -> tuple[PagedCache, SwappedKV]:
+    """Gather `page_ids`' payloads (and scale rows) to host and clear
+    the slot: returns (cache', blob). The caller releases the device
+    pages afterwards — the blob is an exact bit-copy, so `swap_in_slot`
+    into any fresh pages resumes the sequence bit-identically. Host
+    transfer + full-pool gather: this is the slow tier, by design."""
+    ids = np.asarray(page_ids, np.int32)
+    if cache.quantized:
+        k, v, ks, vs = jax.device_get((
+            cache.k_pages[:, ids], cache.v_pages[:, ids],
+            cache.k_scale[:, ids], cache.v_scale[:, ids]))
+    else:
+        k, v = jax.device_get((cache.k_pages[:, ids], cache.v_pages[:, ids]))
+        ks = vs = None
+    blob = SwappedKV(n_tokens=n_tokens, k=np.asarray(k), v=np.asarray(v),
+                     k_scale=None if ks is None else np.asarray(ks),
+                     v_scale=None if vs is None else np.asarray(vs))
+    return clear_slot(cache, slot), blob
+
+
+def swap_in_slot(cache: PagedCache, slot: int, page_ids: list[int],
+                 blob: SwappedKV) -> PagedCache:
+    """Restore a swapped slot: scatter the blob's payloads into freshly
+    allocated `page_ids` and reinstate the block-table row and device
+    length. Inverse of `swap_out_slot` up to physical page numbering."""
+    assert len(page_ids) == blob.n_pages, (len(page_ids), blob.n_pages)
+    ids = jnp.asarray(page_ids, jnp.int32)
+    row = jnp.full((cache.block_tables.shape[1],), TRASH_PAGE,
+                   jnp.int32).at[:len(page_ids)].set(ids)
+    return PagedCache(
+        lengths=cache.lengths.at[slot].set(blob.n_tokens),
+        block_tables=cache.block_tables.at[slot].set(row),
+        k_pages=cache.k_pages.at[:, ids].set(
+            jnp.asarray(blob.k, cache.k_pages.dtype)),
+        v_pages=cache.v_pages.at[:, ids].set(
+            jnp.asarray(blob.v, cache.v_pages.dtype)),
+        k_scale=(None if cache.k_scale is None
+                 else cache.k_scale.at[:, ids].set(
+                     jnp.asarray(blob.k_scale, cache.k_scale.dtype))),
+        v_scale=(None if cache.v_scale is None
+                 else cache.v_scale.at[:, ids].set(
+                     jnp.asarray(blob.v_scale, cache.v_scale.dtype))),
+    )
+
+
 _PREFIX_ROOT = b"salpim-prefix-root"
 
 
@@ -393,21 +520,25 @@ class BlockAllocator:
     """
 
     def __init__(self, num_pages: int, page_size: int,
-                 prefix_sharing: bool = False, telemetry=None):
+                 prefix_sharing: bool = False, telemetry=None,
+                 pin_budget_pages: int = 0):
         assert num_pages >= 2, "need at least trash + 1 usable page"
         assert page_size >= 1
         self.num_pages = num_pages
         self.page_size = page_size
         self.prefix_sharing = prefix_sharing
+        self.pin_budget_pages = pin_budget_pages
         self._tel = telemetry if telemetry is not None else NULL_TELEMETRY
         self._free = list(range(num_pages - 1, TRASH_PAGE, -1))
         self._reserved = 0
         self._pages: dict[int, list[int]] = {}
         self._quota: dict[int, int] = {}     # worst-case *new* pages per uid
         self._owned: dict[int, int] = {}     # pages uid drew from the free list
+        self._reserve_mode: dict[int, bool] = {}   # uid -> watermark-reserved?
         self._ref: dict[int, int] = {}       # physical page -> refcount
         self._prefix_cache: dict[bytes, int] = {}  # chain key -> phys page
         self._page_key: dict[int, bytes] = {}      # phys page -> chain key
+        self._pinned: dict[int, None] = {}   # refcount-0 cached pages (FIFO)
 
     # -- accounting ---------------------------------------------------------
     @property
@@ -444,6 +575,12 @@ class BlockAllocator:
         """Pages currently addressable through the prefix cache."""
         return len(self._prefix_cache)
 
+    @property
+    def pinned_pages(self) -> int:
+        """Prefix-cache pages held alive at refcount 0 (out of the free
+        list, still content-addressable)."""
+        return len(self._pinned)
+
     # -- internal helpers ---------------------------------------------------
     def _alloc(self) -> int:
         page = self._free.pop()
@@ -455,11 +592,57 @@ class BlockAllocator:
         self._ref[page] -= 1
         if self._ref[page] == 0:
             del self._ref[page]
+            if (page in self._page_key
+                    and len(self._pinned) < self.pin_budget_pages):
+                # Pin: the page keeps its bytes and prefix-cache entry at
+                # refcount 0 — a future admission hit revives it.
+                self._pinned[page] = None
+                self._tel.count("sched.pin")
+                return
             key = self._page_key.pop(page, None)
             if key is not None:
                 self._prefix_cache.pop(key, None)
             self._free.append(page)
             self._tel.count("pool.pages_freed")
+
+    def reclaim_pinned(self, n: int, protect=()) -> int:
+        """Evict up to `n` pinned pages (oldest pin first, skipping
+        `protect`) back to the free list, dropping their prefix-cache
+        entries. Returns the number actually reclaimed."""
+        freed = 0
+        for page in list(self._pinned):
+            if freed >= n:
+                break
+            if page in protect:
+                continue
+            del self._pinned[page]
+            key = self._page_key.pop(page, None)
+            if key is not None:
+                self._prefix_cache.pop(key, None)
+            self._free.append(page)
+            self._tel.count("pool.pages_freed")
+            self._tel.count("sched.pin_evict")
+            freed += 1
+        return freed
+
+    def _walk_hits(self, tokens) -> tuple[list[bytes], list[int]]:
+        """Hash-chain walk over `tokens`' full pages: (chain keys, the
+        longest cached run of pages). Pure lookup, no refcount changes."""
+        ps = self.page_size
+        n_full = int(tokens.shape[0]) // ps
+        keys: list[bytes] = []
+        if self.prefix_sharing:
+            key = _PREFIX_ROOT
+            for i in range(n_full):
+                key = _chain_key(key, tokens[i * ps:(i + 1) * ps])
+                keys.append(key)
+        hits: list[int] = []
+        for key in keys:
+            page = self._prefix_cache.get(key)
+            if page is None:
+                break
+            hits.append(page)
+        return keys, hits
 
     def _register(self, key: bytes, page: int) -> None:
         if key not in self._prefix_cache and page not in self._page_key:
@@ -490,73 +673,117 @@ class BlockAllocator:
         self._pages[uid] = pages
         self._quota[uid] = worst
         self._owned[uid] = n0
+        self._reserve_mode[uid] = True
         self._reserved += worst - n0
         return list(pages)
 
-    def admit_tokens(self, uid: int, tokens,
-                     max_new_tokens: int) -> Optional[tuple[list[int], int]]:
+    def admit_tokens(self, uid: int, tokens, max_new_tokens: int,
+                     reserve: bool = True
+                     ) -> Optional[tuple[list[int], int]]:
         """Admit with prefix reuse: returns (prompt pages, shared tokens).
 
         Walks the hash chain over `tokens`' full page-sized chunks; the
-        longest cached run is mapped into this sequence (refcount += 1),
-        the rest allocated fresh, and the fresh *full* pages registered
-        for future admissions. The watermark reserves the worst case net
-        of shared pages — plus one fork page when the prompt is fully
-        covered, since the engine then recomputes the last prompt token
-        and its KV write must COW the final shared page. None if over
-        watermark.
-        """
+        longest cached run is mapped into this sequence (refcount += 1,
+        reviving pinned pages), the rest allocated fresh, and the fresh
+        *full* pages registered for future admissions. With
+        `reserve=True` (watermark mode) the worst case net of shared
+        pages is reserved up front — plus one fork page when the prompt
+        is fully covered, since the engine then recomputes the last
+        prompt token and its KV write must COW the final shared page.
+        With `reserve=False` (optimistic mode) only the pages written
+        during prefill must be free now; later extends draw from the
+        live free list, so the caller must be prepared to preempt.
+        Pinned pages not hit by this prompt are reclaimed automatically
+        to cover a shortage. None when the pool cannot cover the
+        request."""
         assert uid not in self._pages, f"uid {uid} already admitted"
         tokens = np.asarray(tokens)
         n_tok = int(tokens.shape[0])
         ps = self.page_size
         n_full = n_tok // ps
-        keys: list[bytes] = []
-        if self.prefix_sharing:
-            key = _PREFIX_ROOT
-            for i in range(n_full):
-                key = _chain_key(key, tokens[i * ps:(i + 1) * ps])
-                keys.append(key)
-        hits: list[int] = []
-        for key in keys:
-            page = self._prefix_cache.get(key)
-            if page is None:
-                break
-            hits.append(page)
+        keys, hits = self._walk_hits(tokens)
         n_shared = len(hits)
         shared_tokens = n_shared * ps
         total = self.pages_for(self.worst_case_tokens(n_tok, max_new_tokens))
         fork = shared_tokens >= n_tok        # fully covered prompt
         worst_new = total - n_shared + (1 if fork else 0)
-        if self.available_pages < worst_new:
-            self._tel.count("pool.watermark_refusals")
+        n0 = self.pages_for(n_tok)
+        need_now = worst_new if reserve else (n0 - n_shared) + (1 if fork else 0)
+        shortage = (need_now - self.available_pages if reserve
+                    else need_now - len(self._free))
+        if shortage > 0:
+            # Pinned pages this prompt does not hit are reclaimable.
+            self.reclaim_pinned(shortage, protect=frozenset(hits))
+            shortage = (need_now - self.available_pages if reserve
+                        else need_now - len(self._free))
+        if shortage > 0:
+            self._tel.count("pool.watermark_refusals" if reserve
+                            else "pool.admit_refusals")
             return None
         # Hit/miss accounting over *full* prompt pages — the unit the
         # prefix cache shares at (partial tail pages are never cached).
         self._tel.count("prefix_cache.page_hits", n_shared)
         self._tel.count("prefix_cache.page_misses", n_full - n_shared)
-        n0 = self.pages_for(n_tok)
         fresh = [self._alloc() for _ in range(n0 - n_shared)]
         for p in hits:
-            self._ref[p] += 1
+            if p in self._pinned:        # revive: back to refcount 1
+                del self._pinned[p]
+                self._ref[p] = 1
+                self._tel.count("sched.pin_hits")
+            else:
+                self._ref[p] += 1
         pages = hits + fresh
         for i in range(n_shared, len(keys)):
             self._register(keys[i], pages[i])
         self._pages[uid] = pages
         self._quota[uid] = worst_new
         self._owned[uid] = len(fresh)
-        self._reserved += worst_new - len(fresh)
+        self._reserve_mode[uid] = reserve
+        if reserve:
+            self._reserved += worst_new - len(fresh)
         return list(pages), shared_tokens
+
+    def admission_probe(self, tokens, max_new_tokens: int,
+                        reserve: bool = True) -> tuple[int, int]:
+        """Non-mutating admission check: (need_now, reclaimable_pins).
+
+        `need_now` is exactly the free-list draw `admit_tokens` would
+        make for this prompt right now (hit-aware: cached prefix pages
+        cost nothing); `reclaimable_pins` is how many pinned pages a
+        shortage could evict for it — pins the prompt *hits* excluded,
+        since those revive in place and are protected from reclaim.
+        Preemptive schedulers use the pair to decide whether a candidate
+        can ever fit before evicting victims for it (futile evictions
+        would livelock: the same infeasible candidate re-evicts its
+        victims every step)."""
+        tokens = np.asarray(tokens)
+        n_tok = int(tokens.shape[0])
+        hits = self._walk_hits(tokens)[1]
+        n_shared = len(hits)
+        fork = n_shared * self.page_size >= n_tok
+        if reserve:
+            need = (self.pages_for(self.worst_case_tokens(
+                n_tok, max_new_tokens)) - n_shared + (1 if fork else 0))
+        else:
+            need = (self.pages_for(n_tok) - n_shared) + (1 if fork else 0)
+        hit_set = frozenset(hits)
+        reclaimable = sum(1 for p in self._pinned if p not in hit_set)
+        return need, reclaimable
 
     def needs_extend(self, uid: int, next_token_pos: int) -> bool:
         """True when the write at `next_token_pos` falls off mapped pages."""
         return self.pages_for(next_token_pos + 1) > len(self._pages[uid])
 
     def extend(self, uid: int) -> int:
-        """One more page from uid's reservation (decode-step boundary)."""
+        """One more page for uid (decode-step boundary): drawn from its
+        reservation in watermark mode, straight from the free list in
+        optimistic mode (the engine must have ensured capacity)."""
         pages = self._pages[uid]
-        assert self._owned[uid] < self._quota[uid], "reservation exhausted"
-        self._reserved -= 1
+        assert self._owned[uid] < self._quota[uid], "quota exhausted"
+        if self._reserve_mode.get(uid, True):
+            self._reserved -= 1
+        else:
+            assert self._free, "optimistic extend on a dry pool"
         self._owned[uid] += 1
         page = self._alloc()
         pages.append(page)
@@ -564,14 +791,18 @@ class BlockAllocator:
 
     def fork_page(self, uid: int, logical_idx: int) -> tuple[int, int]:
         """COW fork: move uid's `logical_idx` page to a private physical
-        page drawn from its reservation. Returns (old, new); the caller
-        must copy the device page (`copy_page`) and repoint the block
-        table before writing."""
+        page (from its reservation in watermark mode, the free list in
+        optimistic mode). Returns (old, new); the caller must copy the
+        device page (`copy_page`) and repoint the block table before
+        writing."""
         pages = self._pages[uid]
         old = pages[logical_idx]
         assert self._ref[old] > 1, f"fork of unshared page {old}"
-        assert self._owned[uid] < self._quota[uid], "reservation exhausted"
-        self._reserved -= 1
+        assert self._owned[uid] < self._quota[uid], "quota exhausted"
+        if self._reserve_mode.get(uid, True):
+            self._reserved -= 1
+        else:
+            assert self._free, "optimistic fork on a dry pool"
         self._owned[uid] += 1
         new = self._alloc()
         self._decref(old)
@@ -594,6 +825,7 @@ class BlockAllocator:
         device block-table row via `rewind_slot`)."""
         pages = self._pages[uid]
         keep = self.pages_for(n_tokens)
+        reserved = self._reserve_mode.get(uid, True)
         dropped: list[int] = []
         while len(pages) > keep:
             p = pages.pop()
@@ -602,13 +834,57 @@ class BlockAllocator:
             del self._ref[p]
             self._free.append(p)
             self._owned[uid] -= 1
-            self._reserved += 1
+            if reserved:
+                self._reserved += 1
             dropped.append(p)
         self._tel.count("pool.pages_rewound", len(dropped))
         return dropped
 
+    def admit_restored(self, uid: int, n_pages: int, worst_pages: int,
+                       reserve: bool = True) -> Optional[list[int]]:
+        """Re-admit a swapped-out sequence: allocate `n_pages` fresh
+        pages (the caller restores their payloads from the host tier via
+        `swap_in_slot`) under a `worst_pages` lifetime quota. No
+        prefix-cache lookup or registration — restored pages are
+        private. Reclaims pins to cover a shortage; None when the pool
+        cannot cover the request."""
+        assert uid not in self._pages, f"uid {uid} already admitted"
+        assert n_pages <= worst_pages, (n_pages, worst_pages)
+        need_now = worst_pages if reserve else n_pages
+        shortage = (need_now - self.available_pages if reserve
+                    else need_now - len(self._free))
+        if shortage > 0:
+            self.reclaim_pinned(shortage)
+            shortage = (need_now - self.available_pages if reserve
+                        else need_now - len(self._free))
+        if shortage > 0:
+            self._tel.count("pool.watermark_refusals" if reserve
+                            else "pool.admit_refusals")
+            return None
+        pages = [self._alloc() for _ in range(n_pages)]
+        self._pages[uid] = pages
+        self._quota[uid] = worst_pages
+        self._owned[uid] = n_pages
+        self._reserve_mode[uid] = reserve
+        if reserve:
+            self._reserved += worst_pages - n_pages
+        return list(pages)
+
+    def unregister(self, uid: int, from_logical: int = 0) -> None:
+        """Drop prefix-cache entries held by uid's pages at logical index
+        >= `from_logical`. A preempt-aborted mid-prefill sequence calls
+        this before release: pages it registered at admission but never
+        finished writing must not be served from the cache (or pinned)
+        with incomplete payloads."""
+        for p in self._pages[uid][from_logical:]:
+            key = self._page_key.pop(p, None)
+            if key is not None:
+                self._prefix_cache.pop(key, None)
+
     def release(self, uid: int) -> None:
         pages = self._pages.pop(uid)
-        self._reserved -= self._quota.pop(uid) - self._owned.pop(uid)
+        quota, owned = self._quota.pop(uid), self._owned.pop(uid)
+        if self._reserve_mode.pop(uid, True):
+            self._reserved -= quota - owned
         for p in pages:
             self._decref(p)

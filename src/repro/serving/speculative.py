@@ -48,6 +48,17 @@ Two drafters behind one protocol:
     append. Pointing it at the target model itself ("self-draft") gives
     a deterministic 100%-acceptance drafter, used by tests to pin the
     acceptance machinery.
+
+Preemption (scheduler layer): a preempted slot drops its drafter state
+— the engine calls `Drafter.release(slot)` from `_preempt`, because the
+slot id is about to be reused by a different request. For `NgramDrafter`
+release is a no-op (it is stateless; proposals derive from the request's
+own token history, which travels with the swapped request). For
+`DraftModelDrafter` the per-slot dense cache is discarded; on
+re-admission the first `propose` finds no state and `_catch_up`
+re-prefills the draft cache from the handed-in context, so drafting
+after a swap-in resumes exactly (and target-side acceptance keeps
+outputs bit-identical regardless).
 """
 from __future__ import annotations
 

@@ -218,6 +218,9 @@ class RequestTrace:
     slot: Optional[int] = None
     shared_tokens: int = 0
     finish_t: Optional[float] = None
+    # Scheduling class (serving/scheduler.py; 0 = most urgent). Keys the
+    # per-class latency histograms.
+    priority: int = 0
     # One entry per emitted token (speculative rounds emit bursts that
     # legitimately share a timestamp).
     token_times: list[float] = dataclasses.field(default_factory=list)
@@ -250,6 +253,7 @@ class RequestTrace:
         return {
             "uid": self.uid,
             "slot": self.slot,
+            "priority": self.priority,
             "prompt_tokens": self.prompt_tokens,
             "shared_tokens": self.shared_tokens,
             "max_new_tokens": self.max_new_tokens,
@@ -322,11 +326,12 @@ class Telemetry:
 
     # -- request lifecycle --------------------------------------------------
     def request_submitted(self, uid: int, prompt_tokens: int,
-                          max_new_tokens: int) -> None:
+                          max_new_tokens: int, priority: int = 0) -> None:
         if not self.enabled:
             return
         self.requests[uid] = RequestTrace(uid, prompt_tokens,
-                                          max_new_tokens, self.now())
+                                          max_new_tokens, self.now(),
+                                          priority=priority)
         self.registry.counter("requests.submitted").inc()
 
     def request_admitted(self, uid: int, slot: int,
@@ -354,7 +359,11 @@ class Telemetry:
 
     def tokens(self, uid: int, t: float, n: int = 1) -> None:
         """n tokens emitted for `uid` at engine time t (a speculative
-        round's accepted burst arrives together — n > 1, zero deltas)."""
+        round's accepted burst arrives together — n > 1, zero deltas).
+
+        Latency observations land twice: in the aggregate histogram and
+        in a per-scheduling-class one (`...class{p}`), so SLO runs can
+        read p50/p99 per priority class straight off the snapshot."""
         if not self.enabled or n < 1:
             return
         tr = self.requests.get(uid)
@@ -362,15 +371,23 @@ class Telemetry:
         reg.counter("tokens.generated").inc(n)
         if tr is None:
             return
+        cls = f".class{tr.priority}"
         if tr.token_times:
-            reg.histogram("latency.inter_token_sec").observe(
-                t - tr.token_times[-1])
+            gap = t - tr.token_times[-1]
+            reg.histogram("latency.inter_token_sec").observe(gap)
+            reg.histogram("latency.inter_token_sec" + cls).observe(gap)
             if n > 1:
                 reg.histogram("latency.inter_token_sec").observe(0.0, n - 1)
+                reg.histogram("latency.inter_token_sec" + cls).observe(
+                    0.0, n - 1)
         else:
-            reg.histogram("latency.ttft_sec").observe(t - tr.submit_t)
+            ttft = t - tr.submit_t
+            reg.histogram("latency.ttft_sec").observe(ttft)
+            reg.histogram("latency.ttft_sec" + cls).observe(ttft)
             if n > 1:
                 reg.histogram("latency.inter_token_sec").observe(0.0, n - 1)
+                reg.histogram("latency.inter_token_sec" + cls).observe(
+                    0.0, n - 1)
         tr.token_times.extend([t] * n)
 
     def spec_round(self, uid: int, t0: float, t1: float, proposed: int,
@@ -476,6 +493,13 @@ class Telemetry:
                          if k.startswith("admission.rejected.")},
             "blocked_steps": counters.get("admission.blocked_steps", 0),
         }
+        # Scheduler decisions (serving/scheduler.py publishes sched.*):
+        # preempt / swap_out / swap_in / readmit / pin / pin_evict /
+        # pin_hits plus their page counts — the counters the part-7
+        # oversubscription bench uploads as a CI artifact.
+        snap["scheduler"] = {k.split("sched.", 1)[1]: v
+                             for k, v in counters.items()
+                             if k.startswith("sched.")}
         return snap
 
     def reset(self) -> None:

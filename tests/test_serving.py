@@ -249,3 +249,22 @@ def test_engine_stats_under_speculative_run():
     assert 0 < st["verify_passes"] < st["tokens"]
     assert st["verify_per_token"] < 1.0
     assert st["tokens_per_pass"] > 1.0
+
+
+def test_engine_stats_zero_token_drain_returns_zero_ratios():
+    """Satellite regression: every ratio field must report 0.0 — not
+    raise, not NaN — when nothing was generated (empty engine, and again
+    after construction with speculation on)."""
+    from repro.serving.speculative import SpecConfig
+    cfg, params = _setup()
+    for spec in (None, SpecConfig(mode="ngram", k=4)):
+        eng = ServingEngine(params, cfg, ENGINE, slots=2, max_len=32,
+                            gen=GenConfig(temperature=0.0,
+                                          stop_on_eos=False),
+                            paged=True, page_size=4, speculative=spec)
+        st = eng.stats()
+        for field in ("sec_per_token", "model_sec_per_token",
+                      "acceptance_rate", "verify_per_token",
+                      "tokens_per_pass"):
+            assert st[field] == 0.0, field
+        assert st["tokens"] == 0 and st["tokens_budget"] == 0
