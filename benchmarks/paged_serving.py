@@ -69,6 +69,21 @@ step-gap, and not lose goodput (fraction of interactive requests whose
 TTFT meets the deadline). Scheduler counters (sched.preempt/swap_out/
 swap_in/...), per-class latency, and goodput go to `--sched-out`.
 
+Part 8 — multi-chip paged serving: the same mixed workload drained on a
+single device and on a `jax.sharding.Mesh` over 2-8 (fake CPU) devices
+with the page pools PartitionSpec-sharded over their KV-head axis
+(tensor parallel; block tables, lengths, and weights replicated).
+Greedy outputs must be bit-identical to the single-device engine — each
+shard attends its own head block against its local pool shard and the
+merge is a pure head concatenation, never a float reduction. Reports
+decode ms/step and, per mesh width, the per-device resident pool bytes
+(measured from the actual device shards) and the resident-capacity
+scaling at a fixed per-device HBM budget; under --smoke the per-device
+pool bytes must shrink >= 1.8x at mesh width 2. Requires
+`XLA_FLAGS=--xla_force_host_platform_device_count=8` (or real devices);
+with fewer devices than the requested width the part records a skip
+note instead of failing, so single-device CI legs stay green.
+
 Reports, per engine: decode steps to drain, wall time (first step
 excluded as compile warmup), generated tokens/sec, KV bytes
 provisioned, prefill tokens, and peak pages. `--json PATH` (default
@@ -90,6 +105,9 @@ and 6's paged engines from int8 pools.
         --trace-out trace.json --metrics-out telemetry.json
     PYTHONPATH=src python benchmarks/paged_serving.py --smoke --parts 7 \
         --sched-out sched.json
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python benchmarks/paged_serving.py --smoke \
+        --parts 8 --mesh 2 --json mesh_smoke.json
 """
 from __future__ import annotations
 
@@ -104,10 +122,10 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.salpim import SalPimConfig, SalPimEngine
 from repro.models import api
-from repro.serving.engine import GenConfig, ServingEngine
-from repro.serving.scheduler import FifoScheduler, SloScheduler
-from repro.serving.speculative import SpecConfig
-from repro.serving.telemetry import Telemetry, bench_metadata
+from repro.serving import (EngineConfig, FifoScheduler, GenConfig,
+                           ServingEngine, SloScheduler, SpecConfig,
+                           Telemetry)
+from repro.serving.telemetry import bench_metadata
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -302,9 +320,9 @@ def _part4(params, cfg, engine, gen, *, slots, max_len, requests,
     outs = {}
     hists = {}
     for label, kv_dtype in [("paged-fp", "model"), ("paged-int8", "int8")]:
-        eng = ServingEngine(params, cfg, engine, slots=slots,
-                            max_len=max_len, gen=gen, paged=True,
-                            page_size=page_size, kv_cache_dtype=kv_dtype)
+        eng = ServingEngine(params, cfg, engine, EngineConfig(
+            slots=slots, max_len=max_len, gen=gen, paged=True,
+            page_size=page_size, kv_cache_dtype=kv_dtype))
         for p, n in reqs:
             eng.submit(p.copy(), max_new_tokens=n)
         eng.step()                        # compile warmup (untimed)
@@ -407,10 +425,10 @@ def _part5(params, cfg, engine, gen, *, slots, max_len, requests,
         ("spec-off", None),
         ("spec-on", SpecConfig(mode="ngram", k=spec_k)),
     ]:
-        eng = ServingEngine(params, cfg, engine, slots=slots,
-                            max_len=max_len, gen=gen, paged=True,
-                            page_size=page_size, speculative=spec,
-                            kv_cache_dtype=kv_cache_dtype)
+        eng = ServingEngine(params, cfg, engine, EngineConfig(
+            slots=slots, max_len=max_len, gen=gen, paged=True,
+            page_size=page_size, speculative=spec,
+            kv_cache_dtype=kv_cache_dtype))
         st = _drain(eng, [(p.copy(), n) for p, n in reqs],
                     max_steps=max_steps)
         st["ms_per_token"] = 1e3 / max(st["tok_per_sec"], 1e-9)
@@ -513,11 +531,11 @@ def _part6(params, cfg, engine, gen, *, slots, max_len, requests,
     tel = Telemetry(enabled=True)
     engines = {}
     for label, t in [("telemetry-off", None), ("telemetry-on", tel)]:
-        engines[label] = ServingEngine(
-            params, cfg, engine, slots=slots, max_len=max_len, gen=gen,
+        engines[label] = ServingEngine(params, cfg, engine, EngineConfig(
+            slots=slots, max_len=max_len, gen=gen,
             paged=True, page_size=page_size, prefix_sharing=True,
             prefill_chunk_tokens=chunk, kv_cache_dtype=kv_cache_dtype,
-            telemetry=t)
+            telemetry=t))
 
     # Warmup drain per engine pays every jit compile; its outputs feed
     # the bit-identicality assert (the engine is deterministic, so the
@@ -690,11 +708,11 @@ def _part7(params, cfg, engine, gen, *, slots, max_len, requests,
     results, infos, engines = {}, {}, {}
     for label, sched, t in [("fifo", None, None),
                             ("slo", SloScheduler(), tel)]:
-        eng = ServingEngine(
-            params, cfg, engine, slots=slots, max_len=max_len, gen=gen,
+        eng = ServingEngine(params, cfg, engine, EngineConfig(
+            slots=slots, max_len=max_len, gen=gen,
             paged=True, page_size=page_size, num_pages=num_pages,
             prefix_sharing=True, kv_cache_dtype=kv_cache_dtype,
-            scheduler=sched, telemetry=t)
+            scheduler=sched, telemetry=t))
         infos[label] = _drain_stepwise(eng, arrivals, max_steps)
         results[label] = _gap_stats(infos[label], prio=0,
                                     deadline_steps=deadline)
@@ -787,11 +805,10 @@ def _part3(cfg, engine, gen, *, max_len, page_size, seed, max_steps, smoke,
     trials = {label: [] for label, _ in modes}
     outs = {}
     for label, chunk_tokens in modes:
-        engines[label] = ServingEngine(params, cfg, engine, slots=slots,
-                                       max_len=max_len, gen=gen, paged=True,
-                                       page_size=page_size,
-                                       prefill_chunk_tokens=chunk_tokens,
-                                       kv_cache_dtype=kv_cache_dtype)
+        engines[label] = ServingEngine(params, cfg, engine, EngineConfig(
+            slots=slots, max_len=max_len, gen=gen, paged=True,
+            page_size=page_size, prefill_chunk_tokens=chunk_tokens,
+            kv_cache_dtype=kv_cache_dtype))
         # Warm every jit shape (prefill chunks, decode) on this engine.
         _jitter_trial(engines[label], res_prompts, res_new, long_prompt, 4,
                       max_steps)
@@ -840,11 +857,107 @@ def _part3(cfg, engine, gen, *, max_len, page_size, seed, max_steps, smoke,
     return stats
 
 
+def _per_device_pool_bytes(eng):
+    """Resident KV pool bytes on one device, measured from the actual
+    shards (`addressable_shards[0]`) — with a sharded pool this is the
+    global pool bytes divided by the mesh's 'model' axis extent, with a
+    replicated (or single-device) pool it is the full pool."""
+    total = 0
+    for leaf in (eng.cache.k_pages, eng.cache.v_pages,
+                 eng.cache.k_scale, eng.cache.v_scale):
+        if leaf is not None:
+            total += leaf.addressable_shards[0].data.nbytes
+    return total
+
+
+def _part8(params, cfg, engine, gen, *, slots, max_len, requests,
+           page_size, seed, max_steps, smoke, kv_cache_dtype, mesh_width):
+    """Multi-chip paged serving: single-device vs mesh-sharded pools.
+
+    Drains the same mixed workload on a single-device paged engine and
+    on engines whose page pools are sharded over a ("model",) mesh of
+    2-8 fake CPU devices, asserting bit-identical greedy outputs, and
+    measures decode ms/step, per-device resident pool bytes, and the
+    resident-capacity scaling at a fixed per-device HBM budget. Returns
+    the per-width rows plus a skip note when the host exposes too few
+    devices (or the width doesn't divide n_kv_heads).
+    """
+    from jax.sharding import Mesh
+
+    n_dev = len(jax.devices())
+    want = [mesh_width] if mesh_width else [2, 4, 8]
+    widths, skipped = [], []
+    for w in want:
+        if w > n_dev:
+            skipped.append((w, f"{n_dev} device(s) visible"))
+        elif cfg.n_kv_heads % w != 0:
+            skipped.append((w, f"does not divide n_kv_heads={cfg.n_kv_heads}"))
+        else:
+            widths.append(w)
+    for w, why in skipped:
+        print(f"part 8: mesh width {w} skipped ({why})")
+    out = {"devices": n_dev, "widths": widths,
+           "skipped": [f"{w}: {why}" for w, why in skipped]}
+    if not widths:
+        print("part 8: no feasible mesh width; run under "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return out
+
+    rng = np.random.RandomState(seed + 8)
+    reqs = _mixed_workload(rng, cfg.vocab, requests, max_len)
+
+    def build_and_drain(mesh):
+        eng = ServingEngine(params, cfg, engine, EngineConfig(
+            slots=slots, max_len=max_len, gen=gen, paged=True,
+            page_size=page_size, kv_cache_dtype=kv_cache_dtype, mesh=mesh))
+        stats = _drain(eng, [(p.copy(), n) for p, n in reqs],
+                       max_steps=max_steps)
+        stats["step_ms"] = stats["sec"] / max(stats["steps"], 1) * 1e3
+        stats["pool_bytes_per_device"] = _per_device_pool_bytes(eng)
+        return eng, stats
+
+    single_eng, single = build_and_drain(None)
+    single_out = {r.uid: list(r.generated) for r in single_eng.finished}
+    pool_pages = single_eng.allocator.num_pages
+    budget = single["pool_bytes_per_device"]   # one device's pool bytes
+    print(f"  single-device: {single['step_ms']:.2f} ms/step, "
+          f"{budget / 1e6:.2f} MB/device pool, {pool_pages} pages")
+    out["step_ms_single"] = single["step_ms"]
+    out["pool_bytes_per_device_single"] = budget
+    out["per_width"] = {}
+
+    for w in widths:
+        mesh = Mesh(np.array(jax.devices()[:w]), ("model",))
+        eng, stats = build_and_drain(mesh)
+        outs = {r.uid: list(r.generated) for r in eng.finished}
+        assert outs == single_out, \
+            f"mesh={w} outputs diverged from single-device"
+        shrink = budget / stats["pool_bytes_per_device"]
+        # Same per-device HBM budget, w-way sharded pages: the pool that
+        # fits is `shrink`x larger, i.e. resident capacity scales with
+        # the mesh width.
+        pages_at_budget = int(pool_pages * shrink)
+        print(f"  mesh={w}: {stats['step_ms']:.2f} ms/step, "
+              f"{stats['pool_bytes_per_device'] / 1e6:.2f} MB/device pool "
+              f"({shrink:.2f}x shrink), {pages_at_budget} pages at the "
+              f"single-device budget, outputs bit-identical")
+        out["per_width"][str(w)] = {
+            "step_ms": stats["step_ms"],
+            "pool_bytes_per_device": stats["pool_bytes_per_device"],
+            "pool_shrink_x": shrink,
+            "pages_at_budget": pages_at_budget,
+        }
+        if smoke and w >= 2:
+            assert shrink >= 1.8, \
+                f"mesh={w}: per-device pool bytes shrank only {shrink:.2f}x"
+    return out
+
+
 def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
         page_size=16, seed=0, max_steps=10_000, smoke=False,
         json_path=None, kv_cache_dtype="model",
-        parts=(1, 2, 3, 4, 5, 6, 7), trace_out=None, metrics_out=None,
-        sched_out=None):
+        parts=(1, 2, 3, 4, 5, 6, 7, 8), trace_out=None, metrics_out=None,
+        sched_out=None, mesh=0):
     cfg = get_config(arch, smoke=True)
     engine = SalPimEngine.create(SalPimConfig())
     params = api.init_params(jax.random.PRNGKey(0), cfg)
@@ -869,8 +982,8 @@ def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
             ("paged", {"paged": True, "page_size": page_size,
                        "kv_cache_dtype": kv_cache_dtype}),
         ]:
-            eng = ServingEngine(params, cfg, engine, slots=slots,
-                                max_len=max_len, gen=gen, **kwargs)
+            eng = ServingEngine(params, cfg, engine, EngineConfig(
+                slots=slots, max_len=max_len, gen=gen, **kwargs))
             stats = _drain(eng, [(p.copy(), n) for p, n in reqs],
                            max_steps=max_steps)
             stats["kv_bytes"] = _kv_bytes(cfg, eng)
@@ -891,10 +1004,10 @@ def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
         p2 = {}
         for mode, sharing in [("paged-noshare", False),
                               ("paged-share", True)]:
-            eng = ServingEngine(params, cfg, engine, slots=slots,
-                                max_len=max_len, gen=gen, paged=True,
-                                page_size=page_size, prefix_sharing=sharing,
-                                kv_cache_dtype=kv_cache_dtype)
+            eng = ServingEngine(params, cfg, engine, EngineConfig(
+                slots=slots, max_len=max_len, gen=gen, paged=True,
+                page_size=page_size, prefix_sharing=sharing,
+                kv_cache_dtype=kv_cache_dtype))
             stats = _drain(eng, [(p.copy(), n) for p, n in shared_reqs],
                            max_steps=max_steps)
             stats["kv_bytes"] = _kv_bytes(cfg, eng)
@@ -1014,6 +1127,22 @@ def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
             "sched_swap_ins": t7["swap_ins"],
         })
 
+    # -- part 8: multi-chip paged serving (mesh-sharded page pools) ---------
+    if 8 in parts:
+        t8 = _part8(params, cfg, engine, gen, slots=slots, max_len=max_len,
+                    requests=requests, page_size=page_size, seed=seed,
+                    max_steps=max_steps, smoke=smoke,
+                    kv_cache_dtype=kv_cache_dtype, mesh_width=mesh)
+        summary["mesh_devices"] = t8["devices"]
+        summary["mesh_widths"] = t8["widths"]
+        summary["mesh_skipped"] = t8["skipped"]
+        if t8["widths"]:
+            summary["mesh_step_ms_single"] = t8["step_ms_single"]
+            summary["mesh_pool_bytes_per_device_single"] = \
+                t8["pool_bytes_per_device_single"]
+            summary["mesh_per_width"] = t8["per_width"]
+            summary["mesh_bit_identical"] = True
+
     # Every export carries its provenance: schema version, git SHA, jax
     # version, device kind — cross-PR trajectory comparisons need to know
     # what produced each number.
@@ -1052,11 +1181,17 @@ def main():
                     choices=["model", "int8"],
                     help="KV pool storage for parts 1-3, 5, and 6's paged "
                          "engines (part 4 always compares model vs int8)")
-    ap.add_argument("--parts", default="1,2,3,4,5,6,7",
+    ap.add_argument("--parts", default="1,2,3,4,5,6,7,8",
                     help="comma-separated parts to run (e.g. 1,2,4 skips "
                          "the slow decode-jitter study and the "
-                         "speculative, telemetry, and scheduler "
+                         "speculative, telemetry, scheduler, and mesh "
                          "comparisons)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="part 8's mesh width (devices on the tensor-"
+                         "parallel 'model' axis); 0 sweeps every feasible "
+                         "width in 2,4,8. Widths beyond the visible device "
+                         "count are skipped with a note, so part 8 is a "
+                         "no-op on single-device hosts")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the headline numbers (tokens/s, prefill "
                          "tokens saved, peak pages, inter-token p50/p99, "
@@ -1099,7 +1234,7 @@ def main():
         max_steps=args.max_steps, smoke=args.smoke, json_path=args.json,
         kv_cache_dtype=args.kv_cache_dtype, parts=parts,
         trace_out=args.trace_out, metrics_out=args.metrics_out,
-        sched_out=args.sched_out)
+        sched_out=args.sched_out, mesh=args.mesh)
 
 
 if __name__ == "__main__":

@@ -8,6 +8,8 @@ slots (slot-based admission, per-request lengths, EOS release).
         --telemetry --trace-out trace.json
     PYTHONPATH=src python examples/serve_batched.py --paged \
         --scheduler slo --priority --num-pages 12
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_batched.py --paged --mesh 2
 """
 import argparse
 import time
@@ -18,9 +20,8 @@ import jax
 from repro.configs import get_config
 from repro.core.salpim import SalPimConfig, SalPimEngine
 from repro.models import api
-from repro.serving.engine import GenConfig, ServingEngine
-from repro.serving.scheduler import FifoScheduler, SloScheduler
-from repro.serving.telemetry import Telemetry
+from repro.serving import (EngineConfig, FifoScheduler, GenConfig,
+                           ServingEngine, SloScheduler, Telemetry)
 
 
 def main():
@@ -85,6 +86,13 @@ def main():
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome trace_event timeline of the run "
                          "(implies --telemetry; open at ui.perfetto.dev)")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard the paged page pools over this many "
+                         "devices (tensor-parallel 'model' axis; paged "
+                         "mode, must divide the model's KV heads). Run "
+                         "under XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8 to demo on a CPU-only host; "
+                         "greedy outputs stay bit-identical")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--requests", type=int, default=10)
@@ -117,18 +125,28 @@ def main():
     telemetry = Telemetry(enabled=True) if args.telemetry else None
     scheduler = (SloScheduler() if args.scheduler == "slo"
                  else FifoScheduler())
-    eng = ServingEngine(params, cfg, engine, slots=args.slots,
-                        max_len=args.max_len,
-                        gen=GenConfig(temperature=0.0, stop_on_eos=False),
-                        paged=args.paged, page_size=args.page_size,
-                        num_pages=args.num_pages,
-                        prefix_sharing=not args.no_prefix_sharing,
-                        prefill_chunk_tokens=args.prefill_chunk_tokens,
-                        kv_cache_dtype=args.kv_cache_dtype,
-                        kv_scale_dtype=args.kv_scale_dtype,
-                        speculative=speculative,
-                        scheduler=scheduler,
-                        telemetry=telemetry)
+    mesh = None
+    if args.mesh:
+        from jax.sharding import Mesh
+        if args.mesh > len(jax.devices()):
+            raise SystemExit(
+                f"--mesh {args.mesh} but only {len(jax.devices())} "
+                "device(s) visible; set XLA_FLAGS="
+                "--xla_force_host_platform_device_count=8")
+        mesh = Mesh(np.array(jax.devices()[:args.mesh]), ("model",))
+    eng = ServingEngine(params, cfg, engine, EngineConfig(
+        slots=args.slots, max_len=args.max_len,
+        gen=GenConfig(temperature=0.0, stop_on_eos=False),
+        paged=args.paged, page_size=args.page_size,
+        num_pages=args.num_pages,
+        prefix_sharing=not args.no_prefix_sharing,
+        prefill_chunk_tokens=args.prefill_chunk_tokens,
+        kv_cache_dtype=args.kv_cache_dtype,
+        kv_scale_dtype=args.kv_scale_dtype,
+        speculative=speculative,
+        scheduler=scheduler,
+        telemetry=telemetry,
+        mesh=mesh))
     rng = np.random.RandomState(0)
     shared = rng.randint(2, cfg.vocab, size=args.shared_prefix)
     uids = []
@@ -142,6 +160,8 @@ def main():
             f"{eng.allocator.num_pages} pages, kv {eng.kv_cache_dtype})"
             if args.paged else "dense")
     mode += f", scheduler {args.scheduler}"
+    if mesh is not None:
+        mode += f", mesh model={args.mesh}"
     if speculative is not None:
         mode += f", speculative {args.speculative} k={args.spec_k}"
     print(f"submitted {len(uids)} requests into {args.slots} slots [{mode}]")

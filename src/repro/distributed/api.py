@@ -76,6 +76,25 @@ def resolve_spec(logical: Sequence[Optional[str]], mesh: Mesh,
     return P(*axes)
 
 
+def axis_size(mesh: Optional[Mesh], logical: str,
+              rules: Optional[dict] = None) -> int:
+    """Extent of the physical mesh axis (or axes) behind a logical axis
+    name — 1 when no mesh is active or the name maps to nothing. The
+    paged serving stack uses `axis_size(mesh, "model")` as the
+    tensor-parallel shard count for the KV-head pool axis."""
+    if mesh is None:
+        return 1
+    spec = resolve_spec((logical,), mesh, rules)
+    axes = spec[0]
+    if axes is None:
+        return 1
+    names = (axes,) if isinstance(axes, str) else tuple(axes)
+    extent = 1
+    for n in names:
+        extent *= mesh.shape[n]
+    return int(extent)
+
+
 def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     """with_sharding_constraint against the active mesh (no-op without one).
 

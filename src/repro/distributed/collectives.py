@@ -47,6 +47,21 @@ def compressed_psum(grad: Array, axis_name: str,
     return total.astype(jnp.float32) * scale / n, new_ef
 
 
+def gather_heads(x: Array, axis_name: str, axis: int) -> Array:
+    """Tensor-parallel attention-output merge: tiled all-gather of the
+    per-shard head slices along `axis` (inside shard_map).
+
+    Each shard computes attention for a contiguous block of heads
+    against its local KV pool shard, so the merge is a pure
+    concatenation in axis order — no cross-shard arithmetic, which is
+    what keeps mesh-sharded paged decode *bit-identical* to the
+    single-device engine (the wo projection then runs replicated on the
+    gathered heads; contrast `merge_partial_softmax`, whose float
+    psum-merge is exact in math but not in bits).
+    """
+    return jax.lax.all_gather(x, axis_name, axis=axis, tiled=True)
+
+
 def merge_partial_softmax(m: Array, l: Array, acc: Array, axis_name: str
                           ) -> Array:
     """Merge per-shard online-softmax partials across `axis_name`.

@@ -227,6 +227,35 @@ def cache_pspecs(cache_shape: Any, mesh: Mesh, *, seq_shard: bool = False) -> An
     return jax.tree.map(one, cache_shape)
 
 
+def paged_pool_pspecs(mesh: Mesh, *, quantized: bool = False,
+                      rules: Optional[dict] = None) -> dict:
+    """PartitionSpecs for the paged serving cache (`kvcache.PagedCache`).
+
+    Payload pools (L, P, Hkv, page, Dh) and scale pools (L, P, Hkv,
+    page) shard their KV-head axis over the mesh axis behind the
+    logical "model" name (tensor parallel within a replica), so each
+    device holds 1/tp of every page — decode streams the pool from
+    aggregate HBM bandwidth. Bookkeeping (per-slot lengths, block
+    tables) stays replicated: admission, scheduling, COW forks, rewind
+    and swap are host-side and global, exactly as on one device.
+
+    Resolution goes through `distributed.api.resolve_spec`, so custom
+    logical->physical rules (e.g. {"model": "tp"}) apply here too.
+    Returns {"pools", "scales", "lengths", "block_tables"} specs; use
+    `to_shardings` to turn them into NamedShardings.
+    """
+    from repro.distributed import api as dist_api
+    pool = dist_api.resolve_spec((None, None, "model", None, None),
+                                 mesh, rules)
+    specs = {
+        "pools": pool,
+        "lengths": P(),
+        "block_tables": P(),
+    }
+    specs["scales"] = P(*pool[:4]) if quantized else None
+    return specs
+
+
 def to_shardings(pspecs: Any, mesh: Mesh) -> Any:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, pspecs,

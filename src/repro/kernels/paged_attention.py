@@ -23,6 +23,15 @@ the ~2x HBM traffic cut is real while the merge machinery is untouched.
 Grid: (B, Hkv, n_pages); q block (group, D) where group = H // Hkv (GQA
 groups share one K/V page stream). Unmapped table entries point at the
 trash page (physical page 0); their positions are masked by `length`.
+
+Under mesh-sharded serving (`models/attention.py`'s shard_map wrapper)
+the kernel runs unchanged on *per-shard* slices: Hkv here is the local
+KV-head count (n_kv_heads / tp) and the pools are the local pool shard.
+That works because the grid and every index map are head-separable —
+no kernel instance ever reads across the Hkv axis — so sharding that
+axis just shrinks the grid. The q slice keeps group = H // Hkv because
+GQA orders q heads as (kv_head, group): a contiguous H-block lines up
+exactly with its KV-head block.
 """
 from __future__ import annotations
 

@@ -25,6 +25,13 @@ generation stage uses: no dense per-slot prefill arena, no scatter pass.
 
 Grid: (B, Hkv, n_pages); q block (Sq*g, D) where g = H // Hkv (GQA
 groups share one K/V page stream; row r is query r//g, group r%g).
+
+Under mesh-sharded serving (`models/attention.py`'s shard_map wrapper)
+the kernel runs unchanged on per-shard slices — local Hkv, local pool
+shard — exactly as described in `kernels/paged_attention.py`: the grid
+and index maps never cross the Hkv axis, so sharding it only shrinks
+the grid, and the (kv_head, group) q-head ordering keeps each shard's
+q block aligned with its KV heads.
 """
 from __future__ import annotations
 

@@ -146,18 +146,22 @@ def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,
 def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
                      page_size: int, max_pages: int,
                      kv_dtype: str | None = None,
-                     kv_scale_dtype: str = "float32"):
+                     kv_scale_dtype: str = "float32", mesh=None):
     """Paged KV cache (dense/moe families; see serving/kvcache.py).
 
     kv_dtype None defers to cfg.kv_dtype ("model" = compute dtype;
     "int8" = int8 payload pools + scale-row pools, whose storage
-    `kv_scale_dtype` is f32 by default or bf16 for (Dh + 2) B/vector)."""
+    `kv_scale_dtype` is f32 by default or bf16 for (Dh + 2) B/vector).
+    With `mesh`, the pools are placed sharded over their KV-head axis
+    (lengths/block tables replicated) via `kvcache.shard_cache`."""
     from repro.serving.kvcache import init_paged_cache as _init
+    from repro.serving.kvcache import shard_cache
     if cfg.family not in ("dense", "moe"):
         raise ValueError(f"paged cache unsupported for family {cfg.family!r}")
-    return _init(cfg, batch, num_pages, page_size, max_pages,
-                 kv_dtype=kv_dtype if kv_dtype is not None else cfg.kv_dtype,
-                 kv_scale_dtype=kv_scale_dtype)
+    cache = _init(cfg, batch, num_pages, page_size, max_pages,
+                  kv_dtype=kv_dtype if kv_dtype is not None else cfg.kv_dtype,
+                  kv_scale_dtype=kv_scale_dtype)
+    return shard_cache(cache, mesh)
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:

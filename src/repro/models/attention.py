@@ -17,7 +17,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.salpim import SalPimEngine
+from repro.distributed import api as dist_api
 from repro.distributed.api import constrain
+from repro.distributed.collectives import gather_heads
 from repro.models.config import ModelConfig
 from repro.models.rope import apply_rope
 
@@ -147,6 +149,28 @@ def attention_fullseq(
     return out
 
 
+def _paged_tp_axis(n_kv_heads: int):
+    """Mesh + mesh-axis name behind the logical "model" axis, when the
+    paged attention step should run tensor-parallel: a mesh is active
+    (`distributed.api.use_mesh` — the engine enters it around its jitted
+    steps), the axis extent is > 1, and it divides the KV-head count so
+    every shard owns whole KV heads (GQA query heads follow — q's head
+    axis orders as (kv_head, group), so a contiguous H-block of size
+    (Hkv/t)*g is exactly Hkv/t kv heads with all their query heads).
+    Returns (None, None) otherwise and the caller stays single-device.
+    """
+    mesh = dist_api.current_mesh()
+    if mesh is None:
+        return None, None
+    axis = dist_api.resolve_spec(("model",), mesh)[0]
+    if axis is None:
+        return None, None
+    size = dist_api.axis_size(mesh, "model")
+    if size <= 1 or n_kv_heads % size:
+        return None, None
+    return mesh, axis
+
+
 def attention_prefill_chunk_paged(
     p: dict,
     x: Array,                      # (B, S, D) one prompt chunk per sequence
@@ -171,6 +195,12 @@ def attention_prefill_chunk_paged(
     int8 pools (scale rows given) quantize the chunk at write time and
     return (out, k_pages', v_pages', k_scale', v_scale').
 
+    Under an active mesh (engine `mesh=`) the append + attention run
+    inside `shard_map`: each shard appends its KV-head slice of the
+    chunk into its local pool shard and attends its own query heads;
+    the head outputs merge by `collectives.gather_heads` (an exact
+    concatenation), so outputs stay bit-identical to one device.
+
     The speculative verify pass reuses this attention wholesale: its
     chunk is [t0, d1..dk] at the slot's decode frontier, so accepted
     candidates' KV is already pool-resident when the round commits and
@@ -188,25 +218,112 @@ def attention_prefill_chunk_paged(
     q = constrain(q, "batch", None, "model", None)
     k = constrain(k, "batch", None, "model", None)
     v = constrain(v, "batch", None, "model", None)
-    # Bank-sequential placement, chunk-granular: the chunk's K/V lands in
-    # its pages before the read, so queries see their own keys too.
     int8_kv = k_scale is not None
-    if int8_kv:
-        k_pages, v_pages, k_scale, v_scale = append_chunk_kv_pages(
-            k_pages, v_pages, block_tables, start, k, v, k_scale, v_scale)
-    else:
-        k_pages, v_pages = append_chunk_kv_pages(
-            k_pages, v_pages, block_tables, start, k, v)
-
     scale = cfg.attn_scale if cfg.attn_scale is not None else cfg.head_dim ** -0.5
-    out = engine.paged_prefill_attention(
-        q, k_pages, v_pages, block_tables, length, start, k_scale, v_scale,
-        scale=scale, softcap=cfg.attn_softcap, window=window)
+
+    def _write_and_attend(q, k, v, kp, vp, bt, st, ln, win, ksc, vsc):
+        # Bank-sequential placement, chunk-granular: the chunk's K/V
+        # lands in its pages before the read, so queries see their own
+        # keys too.
+        if ksc is not None:
+            kp, vp, ksc, vsc = append_chunk_kv_pages(
+                kp, vp, bt, st, k, v, ksc, vsc)
+        else:
+            kp, vp = append_chunk_kv_pages(kp, vp, bt, st, k, v)
+        att = engine.paged_prefill_attention(
+            q, kp, vp, bt, ln, st, ksc, vsc,
+            scale=scale, softcap=cfg.attn_softcap, window=win)
+        return att, kp, vp, ksc, vsc
+
+    mesh, h_axis = _paged_tp_axis(cfg.n_kv_heads)
+    if mesh is None:
+        out, k_pages, v_pages, k_scale, v_scale = _write_and_attend(
+            q, k, v, k_pages, v_pages, block_tables, start, length, window,
+            k_scale, v_scale)
+    else:
+        out, k_pages, v_pages, k_scale, v_scale = _shard_map_paged(
+            _write_and_attend, mesh, h_axis, head_axis=2,
+            q=q, k=k, v=v, k_pages=k_pages, v_pages=v_pages,
+            block_tables=block_tables, start=start, lengths=length,
+            window=window, k_scale=k_scale, v_scale=v_scale)
+
     out = engine.linear(out.reshape(B, S, -1), p["wo"])
     out = constrain(out, "batch", None, None)
     if int8_kv:
         return out, k_pages, v_pages, k_scale, v_scale
     return out, k_pages, v_pages
+
+
+def _shard_map_paged(write_and_attend, mesh, h_axis, *, head_axis,
+                     q, k, v, k_pages, v_pages, block_tables,
+                     start, lengths, window, k_scale, v_scale):
+    """Run a paged append+attention region tensor-parallel on `mesh`.
+
+    in_specs shard the head axis of q/k/v and the KV-head axis of the
+    pools/scales over `h_axis`; block tables, lengths and positions are
+    replicated (admission and page bookkeeping stay global). Inside the
+    region each shard appends its KV-head slice into its local pool
+    shard and attends its own contiguous query-head block — the same
+    kernels, on a per-shard head slice — then `gather_heads` merges the
+    head outputs by exact concatenation. The updated pool shards come
+    back out still sharded (out_specs), so the engine's donated
+    cache-in/cache-out round trip never re-lays-out the pools.
+
+    `start` is None for the decode step (no chunk offset); `window`
+    is None when the layer attends globally with no window scalar.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    rep = P()
+    pool = P(None, h_axis, None, None)        # (P, Hkv, page, Dh)
+    scrow = P(None, h_axis, None)             # (P, Hkv, page)
+    heads = P(*([None] * head_axis), h_axis, None)  # q/k/v, head axis sharded
+
+    has = {"start": start is not None, "window": window is not None,
+           "scales": k_scale is not None}
+    args = [q, k, v, k_pages, v_pages, block_tables, lengths]
+    in_specs = [heads, heads, heads, pool, pool, rep, rep]
+    out_specs = [heads, pool, pool]
+    if has["start"]:
+        args.append(start)
+        in_specs.append(rep)
+    if has["window"]:
+        args.append(jnp.asarray(window))
+        in_specs.append(rep)
+    if has["scales"]:
+        args += [k_scale, v_scale]
+        in_specs += [scrow, scrow]
+        out_specs += [scrow, scrow]
+
+    def region(q, k, v, kp, vp, bt, ln, *rest):
+        rest = list(rest)
+        st = rest.pop(0) if has["start"] else None
+        win = rest.pop(0) if has["window"] else None
+        ksc, vsc = rest if rest else (None, None)
+        if st is None:
+            att, kp, vp, ksc, vsc = write_and_attend(
+                q, k, v, kp, vp, bt, ln, win, ksc, vsc)
+        else:
+            att, kp, vp, ksc, vsc = write_and_attend(
+                q, k, v, kp, vp, bt, st, ln, win, ksc, vsc)
+        att = gather_heads(att, h_axis, head_axis)
+        out = [att, kp, vp]
+        if ksc is not None:
+            out += [ksc, vsc]
+        return tuple(out)
+
+    # Replicated out_spec for the merged heads: gather_heads already
+    # made every shard's copy identical (check_rep=False because the
+    # region may contain a pallas_call, which has no replication rule).
+    out_specs[0] = rep
+    res = shard_map(region, mesh=mesh, in_specs=tuple(in_specs),
+                    out_specs=tuple(out_specs), check_rep=False)(*args)
+    if has["scales"]:
+        att, kp, vp, ksc, vsc = res
+    else:
+        (att, kp, vp), ksc, vsc = res, None, None
+    return att, kp, vp, ksc, vsc
 
 
 def _quantize_vec(x: Array) -> tuple[Array, Array]:
@@ -248,26 +365,45 @@ def attention_decode_paged(
 ):
     """One decode step against a paged cache; returns (out, k', v').
     int8 pools (scale rows given) quantize the append at write time and
-    return (out, k', v', k_scale', v_scale')."""
+    return (out, k', v', k_scale', v_scale').
+
+    Under an active mesh (engine `mesh=`) the append + attention run
+    inside `shard_map` on per-shard head slices — the memory-bound pool
+    stream splits across every device's HBM — and the head outputs
+    merge by exact concatenation (`collectives.gather_heads`), keeping
+    greedy decode bit-identical to the single-device engine."""
     from repro.serving.kvcache import append_kv_pages
 
     B, _ = x.shape
     q, k, v = _decode_qkv(p, x, cfg, engine, cos, sin)
-
-    # Bank-sequential concat, page-granular: append at each slot's length.
     int8_kv = k_scale is not None
-    if int8_kv:
-        k_pages, v_pages, k_scale, v_scale = append_kv_pages(
-            k_pages, v_pages, block_tables, lengths, k, v, k_scale, v_scale)
-    else:
-        k_pages, v_pages = append_kv_pages(
-            k_pages, v_pages, block_tables, lengths, k, v)
-    valid = lengths + 1
-
     scale = cfg.attn_scale if cfg.attn_scale is not None else cfg.head_dim ** -0.5
-    out = engine.paged_decode_attention(
-        q, k_pages, v_pages, block_tables, valid, k_scale, v_scale,
-        scale=scale, softcap=cfg.attn_softcap, window=window)
+
+    def _write_and_attend(q, k, v, kp, vp, bt, ln, win, ksc, vsc):
+        # Bank-sequential concat, page-granular: append at each slot's
+        # length.
+        if ksc is not None:
+            kp, vp, ksc, vsc = append_kv_pages(kp, vp, bt, ln, k, v,
+                                               ksc, vsc)
+        else:
+            kp, vp = append_kv_pages(kp, vp, bt, ln, k, v)
+        att = engine.paged_decode_attention(
+            q, kp, vp, bt, ln + 1, ksc, vsc,
+            scale=scale, softcap=cfg.attn_softcap, window=win)
+        return att, kp, vp, ksc, vsc
+
+    mesh, h_axis = _paged_tp_axis(cfg.n_kv_heads)
+    if mesh is None:
+        out, k_pages, v_pages, k_scale, v_scale = _write_and_attend(
+            q, k, v, k_pages, v_pages, block_tables, lengths, window,
+            k_scale, v_scale)
+    else:
+        out, k_pages, v_pages, k_scale, v_scale = _shard_map_paged(
+            _write_and_attend, mesh, h_axis, head_axis=1,
+            q=q, k=k, v=v, k_pages=k_pages, v_pages=v_pages,
+            block_tables=block_tables, start=None, lengths=lengths,
+            window=window, k_scale=k_scale, v_scale=v_scale)
+
     out = engine.linear(out.reshape(B, -1), p["wo"])
     if int8_kv:
         return out, k_pages, v_pages, k_scale, v_scale

@@ -509,6 +509,12 @@ def decode_step(params: dict, token: Array, cache, cfg: ModelConfig,
 
     `cache` is either a dense `Cache` or a `serving.kvcache.PagedCache`;
     the paged form routes attention through the block-table kernel.
+
+    Mesh-sharded pools need nothing here: the per-layer pool slices the
+    scan hands to attention inherit the (L, P, Hkv, page, Dh) leaves'
+    KV-head sharding (scan slices axis 0, the layer axis), and the
+    shard_map region lives inside `models/attention.py` — this scan body
+    is identical whether the pools are replicated or sharded.
     """
     from repro.serving.kvcache import PagedCache
     if isinstance(cache, PagedCache):

@@ -25,9 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.salpim import SalPimEngine
+from repro.distributed import api as dist_api
 from repro.models import api as model_api
 from repro.serving import kvcache as kv
 from repro.models.config import ModelConfig
+from repro.serving.config import EngineConfig, GenConfig
 from repro.serving.sampling import sample
 from repro.serving.scheduler import FifoScheduler, Scheduler, SwappedRequest
 from repro.serving.speculative import SpecConfig, greedy_accept, make_drafter
@@ -35,14 +37,51 @@ from repro.serving.telemetry import NULL_TELEMETRY, Telemetry
 
 Array = jax.Array
 
+__all__ = ["EngineConfig", "GenConfig", "Request", "ServingEngine",
+           "generate"]
 
-@dataclasses.dataclass(frozen=True)
-class GenConfig:
-    max_new_tokens: int = 64
-    temperature: float = 0.0
-    top_k: int = 0
-    eos_id: int = 0
-    stop_on_eos: bool = True
+
+class _Counters:
+    """Scheduler-action counters (preemptions / swap-outs / swap-ins),
+    incremented in exactly one spot each *together with* the matching
+    telemetry `sched.*` counters — host-side stats() and the telemetry
+    snapshot cannot drift, whichever engine path (single-device or
+    mesh-sharded) triggered the action."""
+
+    def __init__(self, telemetry: Telemetry):
+        self._tel = telemetry
+        self.preemptions = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+
+    def preempt(self) -> None:
+        self.preemptions += 1
+        self._tel.count("sched.preempt")
+
+    def swap_out(self, pages: int) -> None:
+        self.swap_outs += 1
+        self._tel.count("sched.swap_out")
+        self._tel.count("sched.swap_out_pages", pages)
+
+    def swap_in(self, pages: int) -> None:
+        self.swap_ins += 1
+        self._tel.count("sched.swap_in")
+        self._tel.count("sched.swap_in_pages", pages)
+
+    def readmit(self) -> None:
+        # Aborted mid-prefill entries re-admit without a blob: no pages
+        # move, so only the telemetry event fires.
+        self._tel.count("sched.readmit")
+
+
+def _under_mesh(mesh, fn):
+    """Call `fn` inside `distributed.api.use_mesh(mesh)` so its trace
+    (first call) sees the mesh via current_mesh() and compiles the
+    shard_map paged-attention path."""
+    def call(*args):
+        with dist_api.use_mesh(mesh):
+            return fn(*args)
+    return call
 
 
 def generate(params: dict, prompts: Array, model_cfg: ModelConfig,
@@ -212,32 +251,77 @@ class ServingEngine:
     recorded, no host sync is added, and serving outputs are
     bit-identical with telemetry on or off — instrumentation lives at
     step boundaries only, never inside the jitted programs.
+
+    `mesh=jax.sharding.Mesh(devices, ("model",))` (paged only) serves
+    the page pools sharded across devices: payload and scale pools
+    shard their KV-head axis over the mesh axis behind the logical
+    "model" name, weights/block tables/lengths replicate, and the
+    decode/prefill kernels run inside `shard_map` on per-shard head
+    slices with an exact concatenation merge (collectives.gather_heads)
+    — greedy outputs stay bit-identical to the single-device engine
+    while each device holds 1/tp of the pool bytes. Admission,
+    scheduling, COW forks, rewind and preempt-swap stay host-side and
+    global, so every paged feature works unchanged on a mesh.
+
+    Construction: pass one `EngineConfig` (serving/config.py) —
+    `ServingEngine(params, cfg, engine, EngineConfig(slots=4,
+    max_len=64, paged=True))`. The historical per-feature kwargs still
+    work through a deprecation shim (warns once per process).
     """
 
     def __init__(self, params: dict, model_cfg: ModelConfig,
-                 engine: SalPimEngine, *, slots: int, max_len: int,
-                 gen: GenConfig = GenConfig(), paged: bool = False,
-                 page_size: int = 16, num_pages: Optional[int] = None,
-                 prefix_sharing: bool = True,
+                 engine: SalPimEngine,
+                 config: Optional[EngineConfig] = None, *,
+                 slots: Optional[int] = None,
+                 max_len: Optional[int] = None,
+                 gen: Optional[GenConfig] = None,
+                 paged: Optional[bool] = None,
+                 page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None,
+                 prefix_sharing: Optional[bool] = None,
                  prefill_chunk_tokens: Optional[int] = None,
                  kv_cache_dtype: Optional[str] = None,
-                 kv_scale_dtype: str = "float32",
+                 kv_scale_dtype: Optional[str] = None,
                  speculative: Optional[SpecConfig] = None,
                  scheduler: Optional[Scheduler] = None,
-                 telemetry: Optional[Telemetry] = None, seed: int = 0):
+                 telemetry: Optional[Telemetry] = None,
+                 seed: Optional[int] = None, mesh=None):
+        # Deprecation shim: the historical per-feature kwargs fold into
+        # an EngineConfig (serving/config.py) and warn once per process;
+        # new call sites pass `config=` and nothing else.
+        legacy = {"slots": slots, "max_len": max_len, "gen": gen,
+                  "paged": paged, "page_size": page_size,
+                  "num_pages": num_pages, "prefix_sharing": prefix_sharing,
+                  "prefill_chunk_tokens": prefill_chunk_tokens,
+                  "kv_cache_dtype": kv_cache_dtype,
+                  "kv_scale_dtype": kv_scale_dtype,
+                  "speculative": speculative, "scheduler": scheduler,
+                  "telemetry": telemetry, "seed": seed, "mesh": mesh}
+        if config is None:
+            config = EngineConfig.from_legacy_kwargs(**legacy)
+        else:
+            given = sorted(k for k, v in legacy.items() if v is not None)
+            if given:
+                raise TypeError(
+                    "pass either config=EngineConfig(...) or the legacy "
+                    f"keyword arguments, not both (got {given})")
+        # One place for every feature-interaction rule (preemptive
+        # requires paged, spec is paged+greedy, mesh divides KV heads...)
+        config.validate(model_cfg)
+        self.config = config
+        slots, max_len, gen = config.slots, config.max_len, config.gen
+        paged = config.paged
         self.params = params
         self.cfg = model_cfg
         self.engine = engine
         self.slots = slots
         self.max_len = max_len
         self.gen = gen
-        self.telemetry = telemetry if telemetry is not None else NULL_TELEMETRY
-        self.scheduler = scheduler if scheduler is not None else FifoScheduler()
-        if self.scheduler.preemptive and not paged:
-            raise ValueError(
-                "preemptive scheduling requires paged=True: preemption "
-                "swaps pool pages to the host tier, which the dense "
-                "backend does not have")
+        self.telemetry = (config.telemetry if config.telemetry is not None
+                          else NULL_TELEMETRY)
+        self.scheduler = (config.scheduler if config.scheduler is not None
+                          else FifoScheduler())
+        self.mesh = config.mesh
         self.queue: list[Request] = []
         self.active: list[Optional[Request]] = [None] * slots
         self.finished: list[Request] = []
@@ -245,12 +329,10 @@ class ServingEngine:
         # and the host-RAM tier holding their exact KV payloads.
         self.swapped: list[SwappedRequest] = []
         self.swap_tier = kv.HostSwapTier()
-        self.preemptions = 0
-        self.swap_outs = 0
-        self.swap_ins = 0
+        self._counters = _Counters(self.telemetry)
         self.last_logits = jnp.zeros((slots, model_cfg.vocab), jnp.float32)
         self._uid = 0
-        self._key = jax.random.PRNGKey(seed)
+        self._key = jax.random.PRNGKey(config.seed)
         self._host_len = np.zeros((slots,), np.int64)
         # Serving stats: tokens actually prefilled vs skipped via shared
         # prefix pages, the page pool's high-water mark, speculative
@@ -281,56 +363,24 @@ class ServingEngine:
         self._step_idx = 0
 
         self.paged = paged
-        if prefill_chunk_tokens is not None:
-            if prefill_chunk_tokens < 1:
-                raise ValueError("prefill_chunk_tokens must be >= 1, got "
-                                 f"{prefill_chunk_tokens}")
-            if not paged:
-                raise ValueError(
-                    "prefill_chunk_tokens requires paged=True: the dense "
-                    "backend prefills whole prompts into per-slot arenas "
-                    "and would silently ignore the chunk budget")
-        self.prefill_chunk_tokens = prefill_chunk_tokens
+        self.prefill_chunk_tokens = config.prefill_chunk_tokens
         # KV pool storage: "model" (compute dtype) or "int8" (int8 pages
         # + f32 scale rows, quantized at write time, dequantized in the
         # paged kernels). None defers to the model config's kv_dtype.
-        resolved_kv = kv_cache_dtype if kv_cache_dtype is not None \
-            else model_cfg.kv_dtype
-        if resolved_kv not in ("model", "int8"):
-            raise ValueError(f"unknown kv_cache_dtype {resolved_kv!r}")
-        if kv_cache_dtype is not None and not paged \
-                and kv_cache_dtype != model_cfg.kv_dtype:
-            raise ValueError(
-                "kv_cache_dtype selects the paged pool storage; the dense "
-                "backend's arena dtype comes from cfg.kv_dtype")
+        resolved_kv = config.resolved_kv_dtype(model_cfg)
         self.kv_cache_dtype = resolved_kv
-        if kv_scale_dtype != "float32" and resolved_kv != "int8":
-            raise ValueError(
-                "kv_scale_dtype selects the int8 pools' scale-row "
-                "storage; fp pools have no scale rows")
-        self.kv_scale_dtype = kv_scale_dtype
-        self.spec = speculative
-        if speculative is not None:
-            speculative.validate()
-            if not paged:
-                raise ValueError(
-                    "speculative decoding requires paged=True: rollback "
-                    "is in-pool (rewind lengths + unmap tail pages)")
-            if gen.temperature > 0.0:
-                raise ValueError(
-                    "speculative decoding is greedy-only: acceptance "
-                    "compares drafts against argmax, which is exact "
-                    "only at temperature 0")
-        self.drafter = (make_drafter(speculative, engine, max_len,
+        self.kv_scale_dtype = config.kv_scale_dtype
+        self.spec = config.speculative
+        self.drafter = (make_drafter(config.speculative, engine, max_len,
                                      telemetry=self.telemetry)
-                        if speculative is not None else None)
+                        if config.speculative is not None else None)
         if paged:
             self._kv = kv
-            if page_size < 1:
-                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            page_size, num_pages = config.page_size, config.num_pages
             max_pages = -(-max_len // page_size)
             self.page_bytes = kv.page_kv_bytes(model_cfg, page_size,
-                                               resolved_kv, kv_scale_dtype)
+                                               resolved_kv,
+                                               config.kv_scale_dtype)
             if num_pages is None:
                 # Same *byte* budget as the dense cache (plus the trash
                 # page): int8 pages cost ~half the bytes, so the same
@@ -341,16 +391,33 @@ class ServingEngine:
                     model_cfg, page_size, "model")
                 num_pages = budget // self.page_bytes + 1
             self.allocator = kv.BlockAllocator(
-                num_pages, page_size, prefix_sharing=prefix_sharing,
+                num_pages, page_size,
+                prefix_sharing=config.prefix_sharing,
                 telemetry=self.telemetry,
                 pin_budget_pages=self.scheduler.pin_budget_pages)
+            # With a mesh, the pools come back PartitionSpec-sharded
+            # over their KV-head axis (kvcache.shard_cache wires
+            # distributed.api.resolve_spec into the paged path); the
+            # block tables and lengths live replicated so admission,
+            # COW forks, rewind and swap stay host-side and global.
             self.cache = model_api.init_paged_cache(
                 model_cfg, slots, num_pages, page_size, max_pages,
-                kv_dtype=resolved_kv, kv_scale_dtype=kv_scale_dtype)
+                kv_dtype=resolved_kv, kv_scale_dtype=config.kv_scale_dtype,
+                mesh=self.mesh)
         else:
             self.allocator = None
             self.page_bytes = None
             self.cache = model_api.init_cache(model_cfg, slots, max_len)
+        if self.mesh is not None:
+            # Weights and sampling state replicate across the mesh: only
+            # the KV pools shard (the decode stream they gate is the
+            # memory-bound part), and a replicated wo projection after
+            # the exact head merge keeps outputs bit-identical — a
+            # psum-merged sharded projection would reorder float adds.
+            replicated = jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec())
+            self.params = jax.device_put(params, replicated)
+            self.last_logits = jax.device_put(self.last_logits, replicated)
 
         # The cache is donated: decode and chunk-prefill steps update the
         # KV arena / page pools in place instead of copying the whole
@@ -395,6 +462,28 @@ class ServingEngine:
             lambda p, toks, bt, st, kp, vp, ksc, vsc: model_api.verify_tokens(
                 p, toks, bt, st, kp, vp, model_cfg, engine, ksc, vsc),
             donate_argnums=(4, 5, 6, 7))
+        if self.mesh is not None:
+            # Trace-time mesh activation: the attention layer keys its
+            # shard_map dispatch off distributed.api.current_mesh(), so
+            # every jitted step enters use_mesh(self.mesh) — after the
+            # first trace this is a nanoseconds-scale context switch.
+            self._decode = _under_mesh(self.mesh, self._decode)
+            self._prefill_chunk = _under_mesh(self.mesh, self._prefill_chunk)
+            self._verify = _under_mesh(self.mesh, self._verify)
+
+    # Backward-compatible views of the scheduler-action counters; the
+    # increments live in _Counters so they cannot drift from telemetry.
+    @property
+    def preemptions(self) -> int:
+        return self._counters.preemptions
+
+    @property
+    def swap_outs(self) -> int:
+        return self._counters.swap_outs
+
+    @property
+    def swap_ins(self) -> int:
+        return self._counters.swap_ins
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                priority: int = 0) -> int:
@@ -530,7 +619,6 @@ class ServingEngine:
         state is dropped (the slot id will be reused) and the request
         joins `self.swapped` for the scheduler to re-admit."""
         req = self.active[slot]
-        tel = self.telemetry
         a = self.allocator
         if req.prefilling:
             # Unregister the incompletely written pages this request
@@ -555,9 +643,7 @@ class ServingEngine:
                                    logits=np.asarray(self.last_logits[slot]),
                                    has_blob=True)
             req.shared_prompt_tokens = 0
-            self.swap_outs += 1
-            tel.count("sched.swap_out")
-            tel.count("sched.swap_out_pages", len(ids))
+            self._counters.swap_out(pages=len(ids))
         a.release(req.uid)
         self.active[slot] = None
         self._host_len[slot] = 0
@@ -567,8 +653,7 @@ class ServingEngine:
             # cache from the request context on re-contact.
             self.drafter.release(slot)
         req.preemptions += 1
-        self.preemptions += 1
-        tel.count("sched.preempt")
+        self._counters.preempt()
         self.swapped.append(entry)
 
     def _swap_in(self, entry: SwappedRequest, slot: int,
@@ -580,7 +665,6 @@ class ServingEngine:
         bit-identically. False when the pool refuses."""
         req = entry.req
         a = self.allocator
-        tel = self.telemetry
         if not entry.has_blob:
             res = a.admit_tokens(req.uid, req.prompt, req.max_new_tokens,
                                  reserve=reserve)
@@ -588,7 +672,7 @@ class ServingEngine:
                 return False
             self.swapped.remove(entry)
             self._place_paged(slot, req, res[1])
-            tel.count("sched.readmit")
+            self._counters.readmit()
             return True
         n_map = a.pages_for(entry.n_kv)
         worst = a.pages_for(a.worst_case_tokens(len(req.prompt),
@@ -598,14 +682,18 @@ class ServingEngine:
             return False
         blob = self.swap_tier.pop(req.uid)
         self.cache = self._kv.swap_in_slot(self.cache, slot, pages, blob)
+        if self.mesh is not None:
+            # Swap-in scatters a host blob into the pools eagerly;
+            # shard_cache is a no-op when propagation kept the mesh
+            # placement and a reshard if it drifted — the sharding
+            # invariant holds without forking the swap path.
+            self.cache = self._kv.shard_cache(self.cache, self.mesh)
         self.last_logits = self.last_logits.at[slot].set(
             jnp.asarray(entry.logits))
         self._host_len[slot] = entry.n_kv
         self.active[slot] = req
         self.swapped.remove(entry)
-        self.swap_ins += 1
-        tel.count("sched.swap_in")
-        tel.count("sched.swap_in_pages", n_map)
+        self._counters.swap_in(pages=n_map)
         return True
 
     def _ensure_decode_capacity(self):

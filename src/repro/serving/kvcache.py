@@ -219,6 +219,44 @@ def init_paged_cache(cfg, batch: int, num_pages: int, page_size: int,
     )
 
 
+def shard_cache(cache: PagedCache, mesh, rules=None) -> PagedCache:
+    """Place a PagedCache on a mesh: payload/scale pools sharded over
+    their KV-head axis (the logical "model" axis, via
+    `distributed.sharding.paged_pool_pspecs`), lengths and block tables
+    replicated on every mesh device.
+
+    Idempotent and cheap when already placed — each leaf is moved only
+    if its sharding differs — so the engine also calls this as a safety
+    net after host-side pool surgery (swap-in restores), keeping the
+    sharding invariant without forking any of those paths.
+    """
+    if mesh is None:
+        return cache
+    from jax.sharding import NamedSharding
+    from repro.distributed.sharding import paged_pool_pspecs
+    specs = paged_pool_pspecs(mesh, quantized=cache.quantized, rules=rules)
+
+    def put(x, spec):
+        if x is None:
+            return None
+        target = NamedSharding(mesh, spec)
+        # is_equivalent_to, not ==: jit outputs normalize trailing Nones
+        # off the PartitionSpec, which == treats as a different sharding.
+        have = getattr(x, "sharding", None)
+        if have is not None and have.is_equivalent_to(target, x.ndim):
+            return x
+        return jax.device_put(x, target)
+
+    return PagedCache(
+        lengths=put(cache.lengths, specs["lengths"]),
+        block_tables=put(cache.block_tables, specs["block_tables"]),
+        k_pages=put(cache.k_pages, specs["pools"]),
+        v_pages=put(cache.v_pages, specs["pools"]),
+        k_scale=put(cache.k_scale, specs["scales"]),
+        v_scale=put(cache.v_scale, specs["scales"]),
+    )
+
+
 def append_kv_pages(k_pages: Array, v_pages: Array, block_tables: Array,
                     lengths: Array, k_new: Array, v_new: Array,
                     k_scale: Array | None = None,

@@ -1,5 +1,12 @@
-"""Shared test helpers. NOTE: no XLA_FLAGS here — tests see 1 device;
-multi-device tests spawn subprocesses with their own flags."""
+"""Shared test helpers.
+
+The in-process suite runs with 8 fake CPU devices (the flag below is set
+before any test module imports jax, which is what makes it stick): mesh
+tests build real 2-8 way `jax.sharding.Mesh`es without subprocess
+machinery, and everything else just sees extra idle devices — arrays
+live on device 0 exactly as before. `run_subprocess` still exists for
+tests that need a *different* device count or a cold jax runtime; it
+overwrites XLA_FLAGS wholesale, so it is unaffected by the default."""
 from __future__ import annotations
 
 import os
@@ -7,6 +14,11 @@ import subprocess
 import sys
 
 import pytest
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")

@@ -1,0 +1,214 @@
+"""EngineConfig: the consolidated `ServingEngine` configuration object,
+its single-place validation, the legacy-kwargs deprecation shim
+(bit-identical drains, one warning per process), and the
+`repro.serving` facade exports."""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import repro.serving as serving
+from repro.configs import get_config
+from repro.core.salpim import SalPimConfig, SalPimEngine
+from repro.models import api
+from repro.serving import EngineConfig, GenConfig, ServingEngine
+from repro.serving import config as config_mod
+from repro.serving import engine as engine_mod
+from repro.serving.scheduler import SloScheduler
+
+ENGINE = SalPimEngine.create(SalPimConfig())
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch="gpt2_medium"):
+    cfg = get_config(arch, smoke=True)
+    return cfg, api.init_params(KEY, cfg)
+
+
+def _workload(cfg, seed=0, n=3):
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(2, cfg.vocab, size=rng.randint(4, 9))
+               for _ in range(n)]
+    new = [int(rng.randint(4, 8)) for _ in range(n)]
+    return prompts, new
+
+
+def _drain(eng, prompts, new):
+    uids = [eng.submit(p.copy(), max_new_tokens=n)
+            for p, n in zip(prompts, new)]
+    done = eng.run(max_steps=800)
+    by = {r.uid: list(r.generated) for r in done}
+    return [by[u] for u in uids]
+
+
+@pytest.fixture
+def fresh_warning_state(monkeypatch):
+    """Reset the once-per-process deprecation latch for this test."""
+    monkeypatch.setattr(config_mod, "_legacy_warned", False)
+
+
+# ---------------------------------------------------------------------------
+# The dataclass itself
+# ---------------------------------------------------------------------------
+
+def test_config_is_frozen_value_type():
+    cfg = EngineConfig(slots=2, max_len=32, paged=True, page_size=8)
+    assert cfg == EngineConfig(slots=2, max_len=32, paged=True, page_size=8)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.slots = 4
+    # replace() is the supported way to derive variants.
+    small = dataclasses.replace(cfg, page_size=4)
+    assert small.page_size == 4 and small.slots == 2 and cfg.page_size == 8
+
+
+def test_config_defaults_match_historical_kwarg_defaults(
+        fresh_warning_state):
+    """from_legacy_kwargs with only the required args lands on the same
+    config as the bare constructor — the shim default table and the
+    dataclass defaults cannot drift apart."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        via_shim = EngineConfig.from_legacy_kwargs(slots=2, max_len=32)
+    assert via_shim == EngineConfig(slots=2, max_len=32)
+    assert via_shim.gen == GenConfig()
+    assert via_shim.paged is False and via_shim.page_size == 16
+    assert via_shim.kv_scale_dtype == "float32" and via_shim.seed == 0
+    assert via_shim.mesh is None
+
+
+def test_missing_slots_or_max_len_raises(fresh_warning_state):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(TypeError, match="slots= and max_len="):
+            EngineConfig.from_legacy_kwargs(slots=2)
+        with pytest.raises(TypeError, match="slots= and max_len="):
+            EngineConfig.from_legacy_kwargs(max_len=32)
+
+
+def test_resolved_kv_dtype_defers_to_model_config():
+    cfg, _ = _setup()
+    assert EngineConfig(slots=1, max_len=16).resolved_kv_dtype(cfg) \
+        == cfg.kv_dtype
+    assert EngineConfig(slots=1, max_len=16, paged=True,
+                        kv_cache_dtype="int8").resolved_kv_dtype(cfg) \
+        == "int8"
+
+
+# ---------------------------------------------------------------------------
+# Validation: one place, every construction path
+# ---------------------------------------------------------------------------
+
+def test_validate_mesh_requires_paged():
+    cfg, params = _setup()
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("model",))
+    with pytest.raises(ValueError, match="mesh sharding requires paged"):
+        ServingEngine(params, cfg, ENGINE, EngineConfig(
+            slots=1, max_len=16, mesh=mesh))
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 devices")
+def test_validate_mesh_width_must_divide_kv_heads():
+    cfg, params = _setup()     # smoke gpt2_medium: n_kv_heads = 4
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:8]), ("model",))
+    with pytest.raises(ValueError, match="must divide"):
+        ServingEngine(params, cfg, ENGINE, EngineConfig(
+            slots=1, max_len=16, paged=True, mesh=mesh))
+
+
+def test_validation_identical_through_both_paths(fresh_warning_state):
+    """The same rule fires with the same message whether the engine is
+    built from an EngineConfig or from legacy kwargs."""
+    cfg, params = _setup()
+    msgs = []
+    for build in (
+        lambda: ServingEngine(params, cfg, ENGINE, EngineConfig(
+            slots=1, max_len=16, prefill_chunk_tokens=4)),
+        lambda: ServingEngine(params, cfg, ENGINE, slots=1, max_len=16,
+                              prefill_chunk_tokens=4),
+    ):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            with pytest.raises(ValueError) as ei:
+                build()
+        msgs.append(str(ei.value))
+    assert msgs[0] == msgs[1]
+    assert "prefill_chunk_tokens requires paged=True" in msgs[0]
+
+
+def test_preemptive_scheduler_validation_via_config():
+    cfg, params = _setup()
+    with pytest.raises(ValueError, match="preemptive scheduling requires"):
+        ServingEngine(params, cfg, ENGINE, EngineConfig(
+            slots=1, max_len=16, scheduler=SloScheduler()))
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_config_and_legacy_kwargs_are_mutually_exclusive():
+    cfg, params = _setup()
+    with pytest.raises(TypeError, match="not both"):
+        ServingEngine(params, cfg, ENGINE,
+                      EngineConfig(slots=1, max_len=16), slots=1)
+
+
+def test_legacy_kwargs_warn_exactly_once_per_process(fresh_warning_state):
+    cfg, params = _setup()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        ServingEngine(params, cfg, ENGINE, slots=1, max_len=16)
+        ServingEngine(params, cfg, ENGINE, slots=1, max_len=16, paged=True)
+        ServingEngine(params, cfg, ENGINE,
+                      EngineConfig(slots=1, max_len=16))
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)
+           and "EngineConfig" in str(w.message)]
+    assert len(dep) == 1, [str(w.message) for w in caught]
+
+
+def test_legacy_and_config_engines_drain_bit_identically(
+        fresh_warning_state):
+    """The shim folds kwargs into the exact config the new API takes:
+    both constructions serve the same workload to the same tokens."""
+    cfg, params = _setup()
+    prompts, new = _workload(cfg)
+    gen = GenConfig(temperature=0.0, stop_on_eos=False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = ServingEngine(params, cfg, ENGINE, slots=2, max_len=32,
+                               gen=gen, paged=True, page_size=8,
+                               kv_cache_dtype="int8",
+                               prefill_chunk_tokens=6)
+    modern = ServingEngine(params, cfg, ENGINE, EngineConfig(
+        slots=2, max_len=32, gen=gen, paged=True, page_size=8,
+        kv_cache_dtype="int8", prefill_chunk_tokens=6))
+    assert legacy.config == modern.config
+    assert _drain(legacy, prompts, new) == _drain(modern, prompts, new)
+
+
+def test_engine_exposes_its_config():
+    cfg, params = _setup()
+    ec = EngineConfig(slots=2, max_len=32, paged=True, page_size=8)
+    eng = ServingEngine(params, cfg, ENGINE, ec)
+    assert eng.config is ec
+    assert eng.mesh is None
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+def test_facade_exports_resolve():
+    for name in serving.__all__:
+        assert getattr(serving, name) is not None, name
+
+
+def test_facade_names_are_the_canonical_objects():
+    assert serving.GenConfig is engine_mod.GenConfig
+    assert serving.GenConfig is config_mod.GenConfig
+    assert serving.EngineConfig is config_mod.EngineConfig
+    assert serving.ServingEngine is engine_mod.ServingEngine
