@@ -1,6 +1,7 @@
 #!/usr/bin/env python
 """Dense-slot vs paged continuous batching, prefix sharing, chunked
-prefill decode-latency jitter, and int8 KV pages.
+prefill decode-latency jitter, int8/int4 KV pages, and KV-split
+flash-decode attention.
 
 Part 1 — mixed lengths: the dense `ServingEngine` gives every decode
 slot a `max_len` KV arena, so a workload with mixed prompt/output
@@ -84,6 +85,16 @@ pool bytes must shrink >= 1.8x at mesh width 2. Requires
 with fewer devices than the requested width the part records a skip
 note instead of failing, so single-device CI legs stay green.
 
+Part 9 — KV-split attention + int4 pages: (a) one decode-attention
+call over an 8k-token resident context, single serial page walk vs
+`kv_splits=32` flash-decode partials merged by the log-sum-exp combine
+(`distributed.collectives.merge_partial_softmax_stacked`). The split
+path must be faster at long context — under --smoke its median call
+time must be <= 0.6x the single walk's, with outputs allclose. (b) The
+int4 engine (nibble-packed pools, bf16 scale rows) drains the pinned
+smoke workload in lockstep with fp: greedy outputs exact-match under
+--smoke, peak KV bytes >= 3.5x below fp always.
+
 Reports, per engine: decode steps to drain, wall time (first step
 excluded as compile warmup), generated tokens/sec, KV bytes
 provisioned, prefill tokens, and peak pages. `--json PATH` (default
@@ -93,8 +104,9 @@ version, and device kind (`repro.serving.telemetry.bench_metadata`);
 under --smoke the same stamped summary is also written to
 `BENCH_smoke.json` at the repo root — the tracked cross-PR trajectory
 record. `--parts` selects which parts run (e.g. `--parts 1,2,4` skips
-the slow jitter study); `--kv-cache-dtype int8` serves parts 1-3, 5,
-and 6's paged engines from int8 pools.
+the slow jitter study); `--kv-cache-dtype int8` (or `int4`, which
+implies bf16 scale rows) serves parts 1-3, 5, and 6's paged engines
+from quantized pools.
 
     PYTHONPATH=src python benchmarks/paged_serving.py
     PYTHONPATH=src python benchmarks/paged_serving.py --requests 16 --slots 4
@@ -128,6 +140,15 @@ from repro.serving import (EngineConfig, FifoScheduler, GenConfig,
 from repro.serving.telemetry import bench_metadata
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _kv_opts(kv_cache_dtype):
+    """EngineConfig kwargs for a pool dtype. int4 pools require bf16
+    scale rows (f32 rows would spend the bytes the packing saved), so
+    the choice travels with the dtype everywhere a part builds one."""
+    if kv_cache_dtype == "int4":
+        return {"kv_cache_dtype": "int4", "kv_scale_dtype": "bfloat16"}
+    return {"kv_cache_dtype": kv_cache_dtype}
 
 
 def _mixed_workload(rng, vocab, n, max_len):
@@ -428,7 +449,7 @@ def _part5(params, cfg, engine, gen, *, slots, max_len, requests,
         eng = ServingEngine(params, cfg, engine, EngineConfig(
             slots=slots, max_len=max_len, gen=gen, paged=True,
             page_size=page_size, speculative=spec,
-            kv_cache_dtype=kv_cache_dtype))
+            **_kv_opts(kv_cache_dtype)))
         st = _drain(eng, [(p.copy(), n) for p, n in reqs],
                     max_steps=max_steps)
         st["ms_per_token"] = 1e3 / max(st["tok_per_sec"], 1e-9)
@@ -534,8 +555,8 @@ def _part6(params, cfg, engine, gen, *, slots, max_len, requests,
         engines[label] = ServingEngine(params, cfg, engine, EngineConfig(
             slots=slots, max_len=max_len, gen=gen,
             paged=True, page_size=page_size, prefix_sharing=True,
-            prefill_chunk_tokens=chunk, kv_cache_dtype=kv_cache_dtype,
-            telemetry=t))
+            prefill_chunk_tokens=chunk, telemetry=t,
+            **_kv_opts(kv_cache_dtype)))
 
     # Warmup drain per engine pays every jit compile; its outputs feed
     # the bit-identicality assert (the engine is deterministic, so the
@@ -711,8 +732,8 @@ def _part7(params, cfg, engine, gen, *, slots, max_len, requests,
         eng = ServingEngine(params, cfg, engine, EngineConfig(
             slots=slots, max_len=max_len, gen=gen,
             paged=True, page_size=page_size, num_pages=num_pages,
-            prefix_sharing=True, kv_cache_dtype=kv_cache_dtype,
-            scheduler=sched, telemetry=t))
+            prefix_sharing=True, scheduler=sched, telemetry=t,
+            **_kv_opts(kv_cache_dtype)))
         infos[label] = _drain_stepwise(eng, arrivals, max_steps)
         results[label] = _gap_stats(infos[label], prio=0,
                                     deadline_steps=deadline)
@@ -808,7 +829,7 @@ def _part3(cfg, engine, gen, *, max_len, page_size, seed, max_steps, smoke,
         engines[label] = ServingEngine(params, cfg, engine, EngineConfig(
             slots=slots, max_len=max_len, gen=gen, paged=True,
             page_size=page_size, prefill_chunk_tokens=chunk_tokens,
-            kv_cache_dtype=kv_cache_dtype))
+            **_kv_opts(kv_cache_dtype)))
         # Warm every jit shape (prefill chunks, decode) on this engine.
         _jitter_trial(engines[label], res_prompts, res_new, long_prompt, 4,
                       max_steps)
@@ -909,7 +930,7 @@ def _part8(params, cfg, engine, gen, *, slots, max_len, requests,
     def build_and_drain(mesh):
         eng = ServingEngine(params, cfg, engine, EngineConfig(
             slots=slots, max_len=max_len, gen=gen, paged=True,
-            page_size=page_size, kv_cache_dtype=kv_cache_dtype, mesh=mesh))
+            page_size=page_size, mesh=mesh, **_kv_opts(kv_cache_dtype)))
         stats = _drain(eng, [(p.copy(), n) for p, n in reqs],
                        max_steps=max_steps)
         stats["step_ms"] = stats["sec"] / max(stats["steps"], 1) * 1e3
@@ -953,10 +974,115 @@ def _part8(params, cfg, engine, gen, *, slots, max_len, requests,
     return out
 
 
+def _part9(params, cfg, engine, gen, *, smoke, seed):
+    """KV-split flash-decode attention + int4 page pools.
+
+    (a) Kernel-level split study: one decode-attention call over an 8k-
+    token resident context served from an fp page pool, single page walk
+    vs kv_splits=32 partials (`ops.pim_paged_attention`, reference
+    impl, both jit-compiled). The split path parallelizes the KV walk
+    that the single grid walks serially, so at long context it must be
+    *faster*: median of >= 20 timed calls, gate (under --smoke)
+    split <= 0.6x single-walk, outputs allclose always. Quantized pools
+    are deliberately not gated — XLA fuses their dequant into the walk
+    well enough that splitting does not pay there.
+
+    (b) int4 pools end-to-end: the fp and int4 engines drain the pinned
+    int4 smoke workload (tests/test_paged_int4_split.py serves the same
+    one) in lockstep. Gates: greedy outputs exact-match under --smoke,
+    and peak KV bytes >= 3.5x below fp always (structural: nibble
+    payload + bf16 scale rows vs full-width vectors).
+    """
+    from repro.kernels import ops
+
+    # -- (a) the split study: 8k context, page 16, fp pool ------------------
+    B = 2 if smoke else 4
+    Hq, Hkv, D, page, ctx = 8, 8, 128, 16, 8192
+    npg, splits = ctx // page, 32
+    key = jax.random.PRNGKey(seed + 9)
+    ks = jax.random.split(key, 3)
+    kp = jax.random.normal(ks[0], (B * npg + 1, Hkv, page, D),
+                           dtype=jax.numpy.float32)
+    vp = jax.random.normal(ks[1], kp.shape, dtype=jax.numpy.float32)
+    q = jax.random.normal(ks[2], (B, Hq, D), dtype=jax.numpy.float32)
+    tbl = jax.numpy.asarray(
+        np.random.RandomState(seed).permutation(B * npg).reshape(B, npg)
+        + 1, jax.numpy.int32)
+    lens = jax.numpy.full((B,), ctx, jax.numpy.int32)
+
+    def median_ms(fn, iters=20):
+        fn().block_until_ready()              # compile warmup (untimed)
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn().block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts)) * 1e3
+
+    def single():
+        return ops.pim_paged_attention(q, kp, vp, tbl, lens,
+                                       impl="reference")
+
+    def split():
+        return ops.pim_paged_attention(q, kp, vp, tbl, lens,
+                                       impl="reference", kv_splits=splits)
+    diff = float(jax.numpy.max(jax.numpy.abs(single() - split())))
+    assert diff < 1e-4, f"split path diverged: max diff {diff}"
+    ms_single = median_ms(single)
+    ms_split = median_ms(split)
+    ratio = ms_split / ms_single
+    print(f"kv-split decode attention (B={B}, ctx {ctx}, {splits} splits): "
+          f"{ms_single:.2f} -> {ms_split:.2f} ms/call ({ratio:.2f}x), "
+          f"max output diff {diff:.2e}")
+    if smoke:
+        assert ratio <= 0.6, \
+            f"kv_splits={splits} only reached {ratio:.2f}x at {ctx} ctx"
+
+    # -- (b) int4 pools vs fp on the pinned exact-match workload ------------
+    rng = np.random.RandomState(9)
+    reqs = [(rng.randint(2, cfg.vocab, size=s), n)
+            for s, n in zip((6, 4, 17, 11), (4, 3, 4, 3))]
+    stats, outs = {}, {}
+    for label, kv_dtype in [("paged-fp", "model"), ("paged-int4", "int4")]:
+        eng = ServingEngine(params, cfg, engine, EngineConfig(
+            slots=2, max_len=32, gen=gen, paged=True, page_size=4,
+            **_kv_opts(kv_dtype)))
+        st = _drain(eng, [(p.copy(), n) for p, n in reqs],
+                    max_steps=2_000)
+        outs[label] = {r.uid: list(r.generated) for r in eng.finished}
+        stats[label] = {
+            "step_ms": st["sec"] / max(st["steps"], 1) * 1e3,
+            "peak_kv_bytes": eng.peak_pages * eng.page_bytes,
+            "peak_pages": eng.peak_pages,
+        }
+        print(f"{label:>14}: {st['steps']} steps, "
+              f"{stats[label]['peak_kv_bytes'] / 1e6:.3f} MB peak KV")
+
+    fp, q4 = stats["paged-fp"], stats["paged-int4"]
+    assert q4["peak_pages"] == fp["peak_pages"], "schedules diverged"
+    byte_ratio = fp["peak_kv_bytes"] / max(q4["peak_kv_bytes"], 1)
+    assert byte_ratio >= 3.5, \
+        f"int4 peak KV bytes only dropped {byte_ratio:.2f}x"
+    uids = sorted(outs["paged-fp"])
+    n_match = sum(outs["paged-int4"][u] == outs["paged-fp"][u] for u in uids)
+    if smoke:
+        assert n_match == len(uids), \
+            "int4 KV pages changed greedy outputs on the pinned prompts"
+    print(f"int4 KV pages: peak KV bytes {byte_ratio:.1f}x lower, "
+          f"{n_match}/{len(uids)} outputs exact-match")
+    return {"kvsplit_ms_single": ms_single, "kvsplit_ms_split": ms_split,
+            "kvsplit_ratio": ratio, "kvsplit_maxdiff": diff,
+            "kvsplit_context": ctx, "kvsplit_splits": splits,
+            "peak_kv_bytes_fp": fp["peak_kv_bytes"],
+            "peak_kv_bytes_int4": q4["peak_kv_bytes"],
+            "int4_byte_ratio": byte_ratio,
+            "int4_exact_match": n_match, "int4_exact_match_of": len(uids)}
+
+
 def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
         page_size=16, seed=0, max_steps=10_000, smoke=False,
         json_path=None, kv_cache_dtype="model",
-        parts=(1, 2, 3, 4, 5, 6, 7, 8), trace_out=None, metrics_out=None,
+        parts=(1, 2, 3, 4, 5, 6, 7, 8, 9), trace_out=None, metrics_out=None,
         sched_out=None, mesh=0):
     cfg = get_config(arch, smoke=True)
     engine = SalPimEngine.create(SalPimConfig())
@@ -980,7 +1106,7 @@ def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
         for mode, kwargs in [
             ("dense", {}),
             ("paged", {"paged": True, "page_size": page_size,
-                       "kv_cache_dtype": kv_cache_dtype}),
+                       **_kv_opts(kv_cache_dtype)}),
         ]:
             eng = ServingEngine(params, cfg, engine, EngineConfig(
                 slots=slots, max_len=max_len, gen=gen, **kwargs))
@@ -1007,7 +1133,7 @@ def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
             eng = ServingEngine(params, cfg, engine, EngineConfig(
                 slots=slots, max_len=max_len, gen=gen, paged=True,
                 page_size=page_size, prefix_sharing=sharing,
-                kv_cache_dtype=kv_cache_dtype))
+                **_kv_opts(kv_cache_dtype)))
             stats = _drain(eng, [(p.copy(), n) for p, n in shared_reqs],
                            max_steps=max_steps)
             stats["kv_bytes"] = _kv_bytes(cfg, eng)
@@ -1143,6 +1269,21 @@ def run(arch="gpt2_medium", slots=4, max_len=64, requests=12,
             summary["mesh_per_width"] = t8["per_width"]
             summary["mesh_bit_identical"] = True
 
+    # -- part 9: KV-split flash-decode attention + int4 page pools ----------
+    if 9 in parts:
+        t9 = _part9(params, cfg, engine, gen, smoke=smoke, seed=seed)
+        summary.update({
+            "kvsplit_ms_single": t9["kvsplit_ms_single"],
+            "kvsplit_ms_split": t9["kvsplit_ms_split"],
+            "kvsplit_ratio": t9["kvsplit_ratio"],
+            "kvsplit_context": t9["kvsplit_context"],
+            "kvsplit_splits": t9["kvsplit_splits"],
+            "peak_kv_bytes_int4": t9["peak_kv_bytes_int4"],
+            "int4_byte_ratio": t9["int4_byte_ratio"],
+            "int4_exact_match": t9["int4_exact_match"],
+            "int4_exact_match_of": t9["int4_exact_match_of"],
+        })
+
     # Every export carries its provenance: schema version, git SHA, jax
     # version, device kind — cross-PR trajectory comparisons need to know
     # what produced each number.
@@ -1178,10 +1319,12 @@ def main():
                          "short sequences, small pages; asserts the "
                          "chunked-prefill p99 win and writes --json")
     ap.add_argument("--kv-cache-dtype", default="model",
-                    choices=["model", "int8"],
+                    choices=["model", "int8", "int4"],
                     help="KV pool storage for parts 1-3, 5, and 6's paged "
-                         "engines (part 4 always compares model vs int8)")
-    ap.add_argument("--parts", default="1,2,3,4,5,6,7,8",
+                         "engines (part 4 always compares model vs int8; "
+                         "part 9 always compares model vs int4; int4 "
+                         "implies bf16 scale rows)")
+    ap.add_argument("--parts", default="1,2,3,4,5,6,7,8,9",
                     help="comma-separated parts to run (e.g. 1,2,4 skips "
                          "the slow decode-jitter study and the "
                          "speculative, telemetry, scheduler, and mesh "

@@ -43,15 +43,23 @@ def main():
                     help="chunked paged prefill budget per engine step "
                          "(paged mode; default: whole prompt in one chunk)")
     ap.add_argument("--kv-cache-dtype", default=None,
-                    choices=["model", "int8"],
+                    choices=["model", "int8", "int4"],
                     help="paged pool storage: int8 stores pages as int8 "
                          "+ per-(token, head) scale rows (write-time amax "
                          "quantization, in-kernel dequant) — ~2x KV bytes "
-                         "saved, ~2x pages at the same HBM budget")
+                         "saved, ~2x pages at the same HBM budget; int4 "
+                         "packs two elements per byte (implies bf16 "
+                         "scale rows) for ~4x fewer KV bytes")
     ap.add_argument("--kv-scale-dtype", default="float32",
                     choices=["float32", "bfloat16"],
                     help="int8 mode's scale-row storage: bfloat16 halves "
-                         "the scale overhead to (Dh + 2) B per vector")
+                         "the scale overhead to (Dh + 2) B per vector "
+                         "(int4 requires bf16 and selects it itself)")
+    ap.add_argument("--kv-splits", type=int, default=None,
+                    help="flash-decode KV-split factor: split each "
+                         "slot's page walk into this many online-softmax "
+                         "partials merged by one combine pass (paged "
+                         "mode; engages above 1024-token contexts)")
     ap.add_argument("--speculative", default="off",
                     choices=["off", "ngram", "draft-model"],
                     help="speculative decoding (paged + greedy): a "
@@ -142,7 +150,9 @@ def main():
         prefix_sharing=not args.no_prefix_sharing,
         prefill_chunk_tokens=args.prefill_chunk_tokens,
         kv_cache_dtype=args.kv_cache_dtype,
-        kv_scale_dtype=args.kv_scale_dtype,
+        kv_scale_dtype=("bfloat16" if args.kv_cache_dtype == "int4"
+                        else args.kv_scale_dtype),
+        kv_splits=args.kv_splits,
         speculative=speculative,
         scheduler=scheduler,
         telemetry=telemetry,

@@ -1,0 +1,32 @@
+#!/usr/bin/env python
+"""Fail if docs/*.md or README.md reference a repo path that does not
+exist — the docs' src/ links are load-bearing navigation, so a rename
+that orphans one should fail the lint leg, not rot silently.
+
+Checked: every `path`-looking token (src/, tests/, benchmarks/, docs/,
+scripts/, examples/ prefixes) inside backticks or markdown links.
+"""
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = sorted(ROOT.glob("docs/*.md")) + [ROOT / "README.md"]
+# `src/repro/kernels/ref.py::paged_attention_ref` -> the file part only.
+PATH_RE = re.compile(
+    r"(?:src|tests|benchmarks|docs|scripts|examples)/[\w.*/-]*\w")
+
+bad = []
+for doc in DOCS:
+    for m in PATH_RE.finditer(doc.read_text()):
+        path = m.group(0).split("::")[0].rstrip(".")
+        # `benchmarks/fig*.py`-style globs count if anything matches.
+        ok = (next(ROOT.glob(path), None) is not None if "*" in path
+              else (ROOT / path).exists())
+        if not ok:
+            bad.append(f"{doc.relative_to(ROOT)}: {path}")
+
+if bad:
+    print("dangling repo paths in docs:", *sorted(set(bad)), sep="\n  ")
+    sys.exit(1)
+print(f"checked {len(DOCS)} docs, all referenced paths exist")

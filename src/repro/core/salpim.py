@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from repro.core.nonlinear import Nonlinear
 from repro.core import quant as quant_lib
 from repro.kernels import ops
+from repro.kernels import paged_attention as paged_k
 from repro.kernels import ref as ref_k
 
 Array = jax.Array
@@ -39,6 +40,11 @@ class SalPimConfig:
     fixed_frac_x: int = 10          # Q-format fraction bits (activations)
     use_fused_attention: bool = True
     impl: str = "reference"         # kernels impl: reference|pallas|interpret
+    # KV-split (flash-decode) autotune knob for paged decode attention:
+    # None/1 = single page walk; K > 1 = K online-softmax partials merged
+    # by merge_partial_softmax_stacked, engaged only above
+    # kernels.paged_attention.KV_SPLIT_MIN_CONTEXT resident tokens.
+    kv_splits: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,10 +148,22 @@ class SalPimEngine:
                                softcap: Optional[float] = None,
                                window=None) -> Array:
         """Decode attention reading K/V through a block table
-        (serving/kvcache.py pool layout). int8 pools pass their scale
-        rows; the kernel dequantizes in VMEM."""
+        (serving/kvcache.py pool layout). int8/int4 pools pass their
+        scale rows; the kernel dequantizes (int4: unpacks) in VMEM.
+        `config.kv_splits` > 1 engages the KV-split (flash-decode) path
+        above KV_SPLIT_MIN_CONTEXT resident tokens."""
         exp_table = self.nl.bank.exp if self.nl.mode == "lut" else None
+        splits = paged_k.effective_kv_splits(
+            self.config.kv_splits, block_tables.shape[1],
+            k_pages.shape[2])
         if self.config.impl == "reference":
+            # Direct oracle calls: stay in the caller's trace, so
+            # `window` may be a traced per-layer scalar.
+            if splits is not None:
+                return ref_k.paged_attention_split_ref(
+                    q, k_pages, v_pages, block_tables, length,
+                    k_scales, v_scales, kv_splits=splits, scale=scale,
+                    exp_table=exp_table, softcap=softcap, window=window)
             return ref_k.paged_attention_ref(
                 q, k_pages, v_pages, block_tables, length,
                 k_scales, v_scales, scale=scale,
@@ -153,7 +171,8 @@ class SalPimEngine:
         return ops.pim_paged_attention(
             q, k_pages, v_pages, block_tables, length, k_scales, v_scales,
             scale=scale, exp_table=exp_table, softcap=softcap,
-            window=window, impl=self.config.impl)
+            window=window, kv_splits=self.config.kv_splits,
+            impl=self.config.impl)
 
     def paged_prefill_attention(self, q: Array, k_pages: Array,
                                 v_pages: Array, block_tables: Array,

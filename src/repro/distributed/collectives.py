@@ -76,6 +76,25 @@ def merge_partial_softmax(m: Array, l: Array, acc: Array, axis_name: str
     return acc_glob / jnp.maximum(l_glob, 1e-9)
 
 
+def merge_partial_softmax_stacked(m: Array, l: Array, acc: Array,
+                                  axis: int = 0) -> Array:
+    """Merge online-softmax partials stacked along a local array `axis`.
+
+    Same log-sum-exp algebra as `merge_partial_softmax`, but over an
+    in-array splits axis instead of a mesh axis — this is the combine
+    pass of the KV-split (flash-decode) paged kernels. Empty splits
+    contribute (m=-inf-like sentinel, l=0, acc=0); the finite guard
+    keeps the all-empty case (fully masked query) at exactly zero
+    output instead of NaN.
+    """
+    m_glob = jnp.max(m, axis=axis, keepdims=True)
+    m_glob = jnp.where(m_glob <= -1e30, 0.0, m_glob)
+    corr = jnp.exp(m - m_glob)
+    l_glob = jnp.sum(l * corr, axis=axis)
+    acc_glob = jnp.sum(acc * corr, axis=axis)
+    return acc_glob / jnp.maximum(l_glob, 1e-9)
+
+
 def hierarchical_psum(x: Array, inner_axis: str, outer_axis: str) -> Array:
     """Reduce inside the pod first (fast ICI), then across pods (DCN/slow
     link) — the two-level C-ALU: bank merge then channel merge."""

@@ -112,16 +112,28 @@ def pim_decode_attention(q, k, v, length, *, scale=None,
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "scale", "softcap",
-                                             "window"))
+                                             "window", "kv_splits"))
 def pim_paged_attention(q, k_pages, v_pages, block_tables, length,
                         k_scales=None, v_scales=None, *,
                         scale=None, exp_table: LutTable | None = None,
-                        softcap=None, window=None,
+                        softcap=None, window=None, kv_splits=None,
                         impl: str = "reference") -> jax.Array:
     """Decode attention over a paged KV pool (see serving/kvcache.py).
-    int8 pools pass their (P, Hkv, page) scale rows as k_scales/v_scales;
-    the kernel dequantizes in VMEM, the oracle after the gather."""
+    int8/int4 pools pass their (P, Hkv, page) scale rows as
+    k_scales/v_scales; the kernel dequantizes (int4: unpacks) in VMEM,
+    the oracle after the gather. `kv_splits` > 1 engages the KV-split
+    (flash-decode) path above KV_SPLIT_MIN_CONTEXT resident tokens:
+    per-split online-softmax partials merged by
+    `merge_partial_softmax_stacked` (same log-sum-exp math, so results
+    track the unsplit path to float-associativity tolerance)."""
     if impl == "reference":
+        splits = paged_k.effective_kv_splits(
+            kv_splits, block_tables.shape[1], k_pages.shape[2])
+        if splits is not None:
+            return ref_k.paged_attention_split_ref(
+                q, k_pages, v_pages, block_tables, length,
+                k_scales, v_scales, kv_splits=splits, scale=scale,
+                exp_table=exp_table, softcap=softcap, window=window)
         return ref_k.paged_attention_ref(
             q, k_pages, v_pages, block_tables, length, k_scales, v_scales,
             scale=scale, exp_table=exp_table, softcap=softcap,
@@ -129,7 +141,7 @@ def pim_paged_attention(q, k_pages, v_pages, block_tables, length,
     return paged_k.paged_attention(
         q, k_pages, v_pages, block_tables, length, k_scales, v_scales,
         scale=scale, exp_table=exp_table, softcap=softcap, window=window,
-        interpret=(impl == "interpret"))
+        kv_splits=kv_splits, interpret=(impl == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "scale", "softcap",

@@ -20,9 +20,28 @@ vector instead of 2*Dh for bf16 — and the kernel dequantizes *in VMEM*
 (payload * scale row) before the existing fp32 online-softmax math, so
 the ~2x HBM traffic cut is real while the merge machinery is untouched.
 
+int4 pools pack two values per byte, so the page payload block is
+(page_size, Dh/2) and the DMA moves (Dh/2 + 2) bytes per vector (bf16
+scale rows). Packing is detected structurally (payload axis is half the
+query head_dim) and the kernel unpacks in VMEM with two arithmetic
+shifts plus a halves concat (`serving/quantize.unpack_int4`'s
+convention) before the same dequant multiply.
+
 Grid: (B, Hkv, n_pages); q block (group, D) where group = H // Hkv (GQA
 groups share one K/V page stream). Unmapped table entries point at the
 trash page (physical page 0); their positions are masked by `length`.
+
+KV-split (flash-decode) mode (`kv_splits` > 1): the page walk becomes a
+4D grid (B, Hkv, kv_splits, pages_per_split). Each split runs the same
+online-softmax over only its contiguous run of block-table pages and
+writes *partials* — (m, l, un-normalized acc) — and a single combine
+pass outside the kernel merges them with
+`distributed.collectives.merge_partial_softmax_stacked` (the same
+log-sum-exp algebra as the mesh-axis C-ALU merge). Splitting breaks
+the sequential page-walk dependency chain so long contexts expose
+parallelism across the grid; `effective_kv_splits` auto-disables it
+below `KV_SPLIT_MIN_CONTEXT` resident tokens where the partials
+traffic would dominate.
 
 Under mesh-sharded serving (`models/attention.py`'s shard_map wrapper)
 the kernel runs unchanged on *per-shard* slices: Hkv here is the local
@@ -46,13 +65,48 @@ from repro.core.lut import LutTable
 from repro.kernels.decode_attention import NEG_INF, _lut_eval
 from repro.kernels.lut_interp import TABLE_PAD
 
+# Below this many resident tokens the split path's partials traffic
+# outweighs the parallelism win; effective_kv_splits disables it.
+KV_SPLIT_MIN_CONTEXT = 1024
+
+
+def effective_kv_splits(kv_splits: int | None, n_pages: int,
+                        page_size: int) -> int | None:
+    """Resolve the autotune knob to an actual split count, or None.
+
+    Static (trace-time) decision: splitting engages only when asked
+    (kv_splits > 1) and the table's worth of context is at least
+    KV_SPLIT_MIN_CONTEXT tokens; the count is clamped to n_pages so
+    every split owns at least one page.
+    """
+    if kv_splits is None or kv_splits <= 1:
+        return None
+    if n_pages * page_size < KV_SPLIT_MIN_CONTEXT:
+        return None
+    return min(kv_splits, n_pages)
+
+
+def _dequant_page(x_ref, sc_ref, packed):
+    """One page payload block -> f32 (page_size, D): int4 nibble unpack
+    (arithmetic shifts sign-extend; halves concat, no stride-2 shuffle)
+    then the scale-row dequant multiply, all in VMEM after the DMA."""
+    x = x_ref[0, 0]
+    if packed:
+        x = jnp.concatenate(
+            [jnp.right_shift(jnp.left_shift(x, 4), 4),
+             jnp.right_shift(x, 4)], axis=-1)
+    x = x.astype(jnp.float32)
+    if sc_ref is not None:
+        x = x * sc_ref[0, 0].astype(jnp.float32)[:, None]
+    return x
+
 
 def _paged_attn_kernel(
     len_ref,   # scalar prefetch: (B,) int32 valid lengths
     tbl_ref,   # scalar prefetch: (B, n_pages) int32 physical page ids
     *refs,     # q, k, v, [ksc, vsc,] expwb, o, then m/l/acc scratch
     n_pages, page_size, scale, use_lut, lo, inv_step, sections,
-    softcap, window, quantized,
+    softcap, window, quantized, packed,
 ):
     if quantized:
         (q_ref, k_ref, v_ref, ksc_ref, vsc_ref, expwb_ref, o_ref,
@@ -72,11 +126,10 @@ def _paged_attn_kernel(
     length = len_ref[b]
 
     q = q_ref[0, 0].astype(jnp.float32)          # (g, D)
-    k = k_ref[0, 0].astype(jnp.float32)          # (page_size, D)
-    if quantized:
-        # In-kernel dequant: the page arrived as int8; the scale row is
-        # DMA'd in its storage dtype (f32 or bf16) and widened in VMEM.
-        k = k * ksc_ref[0, 0].astype(jnp.float32)[:, None]
+    # In-kernel dequant: the page arrived narrow (int8, or nibble-packed
+    # int4); the scale row is DMA'd in its storage dtype (f32 or bf16)
+    # and widened in VMEM.
+    k = _dequant_page(k_ref, ksc_ref, packed)    # (page_size, D)
     # Direction 1: contract head_dim (Q x K^T) — same layout, no transpose.
     scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     if softcap is not None:
@@ -105,9 +158,7 @@ def _paged_attn_kernel(
 
     l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
     # Direction 2: contract seq (S x V) over the same V page.
-    v = v_ref[0, 0].astype(jnp.float32)           # (page_size, D)
-    if quantized:
-        v = v * vsc_ref[0, 0].astype(jnp.float32)[:, None]
+    v = _dequant_page(v_ref, vsc_ref, packed)     # (page_size, D)
     acc_ref[...] = acc_ref[...] * corr + jnp.dot(
         p, v, preferred_element_type=jnp.float32
     )
@@ -117,6 +168,80 @@ def _paged_attn_kernel(
     def _writeback():
         l = jnp.maximum(l_ref[...], 1e-9)
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _paged_attn_split_kernel(
+    len_ref,   # scalar prefetch: (B,) int32 valid lengths
+    tbl_ref,   # scalar prefetch: (B, kv_splits * pps) int32, trash-padded
+    *refs,     # q, k, v, [ksc, vsc,] expwb, m_out, l_out, acc_out,
+               # then m/l/acc scratch
+    pps, page_size, scale, use_lut, lo, inv_step, sections,
+    softcap, window, quantized, packed,
+):
+    """KV-split body: identical page math as `_paged_attn_kernel`, but
+    the page walk covers only this split's `pps` pages and the writeback
+    emits raw partials (m, l, un-normalized acc) for the host-side
+    `merge_partial_softmax_stacked` combine. A split whose pages are all
+    past `length` (trash-padded tail) emits the empty partial
+    (m=NEG_INF, l=0, acc=0), which the merge's finite guard absorbs."""
+    if quantized:
+        (q_ref, k_ref, v_ref, ksc_ref, vsc_ref, expwb_ref,
+         mo_ref, lo_ref, ao_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (q_ref, k_ref, v_ref, expwb_ref,
+         mo_ref, lo_ref, ao_ref, m_ref, l_ref, acc_ref) = refs
+        ksc_ref = vsc_ref = None
+    b = pl.program_id(0)
+    sp_idx = pl.program_id(2)
+    p_idx = pl.program_id(3)
+
+    @pl.when(p_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (g, D)
+    k = _dequant_page(k_ref, ksc_ref, packed)    # (page_size, D)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+
+    # Absolute position: this split's run starts sp_idx * pps pages in.
+    pos = ((sp_idx * pps + p_idx) * page_size
+           + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1))
+    mask = pos < length
+    if window is not None:
+        mask = jnp.logical_and(mask, pos >= length - window)
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m_prev = m_ref[...]                           # (g, 1)
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    if use_lut:
+        p = _lut_eval(scores - m_new, expwb_ref, lo=lo, inv_step=inv_step,
+                      sections=sections)
+        corr = _lut_eval(jnp.maximum(m_prev - m_new, lo), expwb_ref,
+                         lo=lo, inv_step=inv_step, sections=sections)
+    else:
+        p = jnp.exp(scores - m_new)
+        corr = jnp.exp(m_prev - m_new)
+    p = jnp.where(mask, p, 0.0)
+
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    v = _dequant_page(v_ref, vsc_ref, packed)     # (page_size, D)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(p_idx == pps - 1)
+    def _writeback():
+        mo_ref[0, 0, 0] = m_ref[...]
+        lo_ref[0, 0, 0] = l_ref[...]
+        ao_ref[0, 0, 0] = acc_ref[...]
 
 
 def paged_attention(
@@ -132,6 +257,7 @@ def paged_attention(
     exp_table: LutTable | None = None,
     softcap: float | None = None,
     window: int | None = None,
+    kv_splits: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     B, H, D = q.shape
@@ -156,15 +282,28 @@ def paged_attention(
     lens = length.astype(jnp.int32)
     tables = block_tables.astype(jnp.int32)
     quantized = k_scales is not None
+    packed = 2 * k_pages.shape[-1] == D    # nibble-packed int4 payload
+    Dp = k_pages.shape[-1]                 # payload axis (D, or D/2 packed)
+    if packed and not quantized:
+        raise ValueError("packed int4 pools require scale rows")
+
+    splits = effective_kv_splits(kv_splits, n_pages, page_size)
+    if splits is not None:
+        return _paged_attention_split(
+            qg, k_pages, v_pages, tables, lens, k_scales, v_scales,
+            splits=splits, scale=scale, wb=wb, use_lut=use_lut, lo=lo,
+            inv_step=inv_step, sections=sections, softcap=softcap,
+            window=window, quantized=quantized, packed=packed,
+            interpret=interpret, out_dtype=q.dtype)
 
     kernel = functools.partial(
         _paged_attn_kernel, n_pages=n_pages, page_size=page_size,
         scale=scale, use_lut=use_lut, lo=lo, inv_step=inv_step,
         sections=sections, softcap=softcap, window=window,
-        quantized=quantized,
+        quantized=quantized, packed=packed,
     )
     # Physical page addresses come from the prefetched block table.
-    page_spec = pl.BlockSpec((1, 1, page_size, D),
+    page_spec = pl.BlockSpec((1, 1, page_size, Dp),
                              lambda b, h, s, lens_ref, tbl_ref:
                              (tbl_ref[b, s], h, 0, 0))
     scale_spec = pl.BlockSpec((1, 1, page_size),
@@ -203,3 +342,75 @@ def paged_attention(
         interpret=interpret,
     )(lens, tables, *inputs)
     return out.reshape(B, H, D)
+
+
+def _paged_attention_split(
+    qg, k_pages, v_pages, tables, lens, k_scales, v_scales, *,
+    splits, scale, wb, use_lut, lo, inv_step, sections, softcap,
+    window, quantized, packed, interpret, out_dtype,
+):
+    """KV-split pallas_call: 4D grid + host-side partials combine."""
+    from repro.distributed.collectives import merge_partial_softmax_stacked
+
+    B, Hkv, g, D = qg.shape
+    page_size, Dp = k_pages.shape[2], k_pages.shape[-1]
+    n_pages = tables.shape[1]
+    pps = -(-n_pages // splits)            # pages per split
+    pad = pps * splits - n_pages
+    if pad:
+        # Trash-page padding: positions land >= length, so masked out.
+        tables = jnp.pad(tables, ((0, 0), (0, pad)))
+
+    kernel = functools.partial(
+        _paged_attn_split_kernel, pps=pps, page_size=page_size,
+        scale=scale, use_lut=use_lut, lo=lo, inv_step=inv_step,
+        sections=sections, softcap=softcap, window=window,
+        quantized=quantized, packed=packed,
+    )
+    page_spec = pl.BlockSpec((1, 1, page_size, Dp),
+                             lambda b, h, sp, p, lens_ref, tbl_ref:
+                             (tbl_ref[b, sp * pps + p], h, 0, 0))
+    scale_spec = pl.BlockSpec((1, 1, page_size),
+                              lambda b, h, sp, p, lens_ref, tbl_ref:
+                              (tbl_ref[b, sp * pps + p], h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, D), lambda b, h, sp, p, *_: (b, h, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    inputs = [qg, k_pages, v_pages]
+    if quantized:
+        in_specs += [scale_spec, scale_spec]
+        inputs += [k_scales, v_scales]
+    in_specs.append(pl.BlockSpec((TABLE_PAD, 2),
+                                 lambda b, h, sp, p, *_: (0, 0)))
+    inputs.append(wb)
+
+    part_spec = pl.BlockSpec((1, 1, 1, g, 1),
+                             lambda b, h, sp, p, *_: (b, h, sp, 0, 0))
+    acc_spec = pl.BlockSpec((1, 1, 1, g, D),
+                            lambda b, h, sp, p, *_: (b, h, sp, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, splits, pps),
+        in_specs=in_specs,
+        out_specs=[part_spec, part_spec, acc_spec],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, D), jnp.float32),
+        ],
+    )
+
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, splits, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, splits, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, splits, g, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, tables, *inputs)
+    out = merge_partial_softmax_stacked(m, l, acc, axis=2)
+    return out.reshape(B, Hkv * g, D).astype(out_dtype)

@@ -19,9 +19,11 @@ generation stage uses: no dense per-slot prefill arena, no scatter pass.
     (key <= start + row//g) on top of the length mask;
   * exp optionally routes through the same 64-section LUT;
   * int8 pools (`k_scales`/`v_scales` given) dequantize in VMEM right
-    after the page DMA (payload * per-(page, head) f32 scale row), the
+    after the page DMA (payload * per-(page, head) scale row), the
     same in-kernel dequant as `kernels/paged_attention.py` — the chunk's
-    own K/V was already amax-quantized at write time by the caller.
+    own K/V was already amax-quantized at write time by the caller;
+    int4 pools (payload axis Dh/2, detected structurally) additionally
+    nibble-unpack in VMEM first, via the shared `_dequant_page`.
 
 Grid: (B, Hkv, n_pages); q block (Sq*g, D) where g = H // Hkv (GQA
 groups share one K/V page stream; row r is query r//g, group r%g).
@@ -45,6 +47,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.lut import LutTable
 from repro.kernels.decode_attention import NEG_INF, _lut_eval
 from repro.kernels.lut_interp import TABLE_PAD
+from repro.kernels.paged_attention import _dequant_page
 
 
 def _paged_prefill_kernel(
@@ -53,7 +56,7 @@ def _paged_prefill_kernel(
     tbl_ref,    # scalar prefetch: (B, n_pages) int32 physical page ids
     *refs,      # q, k, v, [ksc, vsc,] expwb, o, then m/l/acc scratch
     n_pages, page_size, g, scale, use_lut, lo, inv_step, sections,
-    softcap, window, quantized,
+    softcap, window, quantized, packed,
 ):
     if quantized:
         (q_ref, k_ref, v_ref, ksc_ref, vsc_ref, expwb_ref, o_ref,
@@ -74,11 +77,10 @@ def _paged_prefill_kernel(
     start = start_ref[b]
 
     q = q_ref[0, 0].astype(jnp.float32)          # (Sq*g, D)
-    k = k_ref[0, 0].astype(jnp.float32)          # (page_size, D)
-    if quantized:
-        # In-kernel dequant: the page arrived as int8; the scale row is
-        # DMA'd in its storage dtype (f32 or bf16) and widened in VMEM.
-        k = k * ksc_ref[0, 0].astype(jnp.float32)[:, None]
+    # In-kernel dequant: the page arrived narrow (int8, or nibble-packed
+    # int4); the scale row is DMA'd in its storage dtype (f32 or bf16)
+    # and widened in VMEM.
+    k = _dequant_page(k_ref, ksc_ref, packed)    # (page_size, D)
     # Direction 1: contract head_dim (Q x K^T) — same layout, no transpose.
     scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     if softcap is not None:
@@ -109,9 +111,7 @@ def _paged_prefill_kernel(
 
     l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
     # Direction 2: contract seq (S x V) over the same V page.
-    v = v_ref[0, 0].astype(jnp.float32)          # (page_size, D)
-    if quantized:
-        v = v * vsc_ref[0, 0].astype(jnp.float32)[:, None]
+    v = _dequant_page(v_ref, vsc_ref, packed)    # (page_size, D)
     acc_ref[...] = acc_ref[...] * corr + jnp.dot(
         p, v, preferred_element_type=jnp.float32
     )
@@ -165,15 +165,19 @@ def paged_prefill_attention(
     starts = start.astype(jnp.int32)
     tables = block_tables.astype(jnp.int32)
     quantized = k_scales is not None
+    packed = 2 * k_pages.shape[-1] == D    # nibble-packed int4 payload
+    Dp = k_pages.shape[-1]                 # payload axis (D, or D/2 packed)
+    if packed and not quantized:
+        raise ValueError("packed int4 pools require scale rows")
 
     kernel = functools.partial(
         _paged_prefill_kernel, n_pages=n_pages, page_size=page_size, g=g,
         scale=scale, use_lut=use_lut, lo=lo, inv_step=inv_step,
         sections=sections, softcap=softcap, window=window,
-        quantized=quantized,
+        quantized=quantized, packed=packed,
     )
     # Physical page addresses come from the prefetched block table.
-    page_spec = pl.BlockSpec((1, 1, page_size, D),
+    page_spec = pl.BlockSpec((1, 1, page_size, Dp),
                              lambda b, h, s, lens_ref, start_ref, tbl_ref:
                              (tbl_ref[b, s], h, 0, 0))
     scale_spec = pl.BlockSpec((1, 1, page_size),

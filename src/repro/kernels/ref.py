@@ -162,6 +162,25 @@ def kv_roundtrip_ref(x: Array, scale_dtype=jnp.float32) -> Array:
     return dequantize_vec(q, scale, jnp.float32)
 
 
+def quantize_kv_int4_ref(x: Array, scale_dtype=jnp.float32
+                         ) -> tuple[Array, Array]:
+    """int4 write-time oracle: exactly `quantize_vec_int4` (amax/7,
+    clip to +-7, two nibbles packed per byte), which both paged append
+    paths execute on device for pools whose payload axis is Dh/2."""
+    from repro.serving.quantize import quantize_vec_int4
+    return quantize_vec_int4(x, scale_dtype=scale_dtype)
+
+
+def kv_roundtrip_int4_ref(x: Array, scale_dtype=jnp.float32) -> Array:
+    """int4 quantize->unpack->dequantize oracle, mirroring the kernels'
+    read path bit-for-bit: the fp oracle on this roundtripped K/V must
+    match the int4 kernel on the packed pool elementwise. Quantization
+    error envelope ~1/7 relative per vector (vs int8's ~1/127)."""
+    from repro.serving.quantize import dequantize_vec_int4
+    p, scale = quantize_kv_int4_ref(x, scale_dtype=scale_dtype)
+    return dequantize_vec_int4(p, scale, jnp.float32)
+
+
 def greedy_accept_len_ref(drafts: Array, verify_logits: Array) -> int:
     """Acceptance oracle for the speculative verify pass.
 
@@ -184,14 +203,25 @@ def greedy_accept_len_ref(drafts: Array, verify_logits: Array) -> int:
 
 
 def _gather_paged_kv(pages: Array, scales: Array | None,
-                     block_tables: Array) -> Array:
-    """(P, Hkv, page, D) pool -> dense (B, Hkv, S, D) via block tables,
-    dequantizing int8 payloads with their gathered scale rows."""
+                     block_tables: Array,
+                     head_dim: int | None = None) -> Array:
+    """(P, Hkv, page, Dp) pool -> dense (B, Hkv, S, D) via block tables,
+    dequantizing int8/int4 payloads with their gathered scale rows.
+
+    `head_dim` is the model head_dim as seen by the query; a pool whose
+    payload axis is half of it is nibble-packed int4 and is unpacked
+    (`serving/quantize.unpack_int4`) before the scale multiply — the
+    same structural detection the appends use at write time.
+    """
     B, n_pages = block_tables.shape
     Hkv, page, D = pages.shape[1], pages.shape[2], pages.shape[3]
     # (B, n_pages, Hkv, page, D) -> (B, Hkv, n_pages * page, D)
     x = jnp.moveaxis(pages[block_tables], 2, 1).reshape(
         B, Hkv, n_pages * page, D)
+    if head_dim is not None and 2 * D == head_dim:
+        from repro.serving.quantize import unpack_int4
+        assert scales is not None, "packed int4 pools require scale rows"
+        x = unpack_int4(x)
     if scales is not None:
         s = jnp.moveaxis(scales[block_tables], 2, 1).reshape(
             B, Hkv, n_pages * page)
@@ -221,14 +251,112 @@ def paged_attention_ref(
     pools (k_scales/v_scales given) are dequantized after the gather,
     elementwise identical to the kernel's in-VMEM dequant.
 
-    q: (B, H, D); k_pages/v_pages: (P, Hkv, page, D) shared pool;
-    block_tables: (B, n_pages) int32 physical page ids; length: (B,).
+    q: (B, H, D); k_pages/v_pages: (P, Hkv, page, D) shared pool
+    (payload axis D/2 for packed int4 pools); block_tables: (B, n_pages)
+    int32 physical page ids; length: (B,).
     """
-    k = _gather_paged_kv(k_pages, k_scales, block_tables)
-    v = _gather_paged_kv(v_pages, v_scales, block_tables)
+    Dh = q.shape[-1]
+    k = _gather_paged_kv(k_pages, k_scales, block_tables, head_dim=Dh)
+    v = _gather_paged_kv(v_pages, v_scales, block_tables, head_dim=Dh)
     return decode_attention_ref(
         q, k, v, length, scale=scale, exp_table=exp_table,
         softcap=softcap, window=window)
+
+
+def paged_attention_split_ref(
+    q: Array,
+    k_pages: Array,
+    v_pages: Array,
+    block_tables: Array,
+    length: Array,
+    k_scales: Array | None = None,
+    v_scales: Array | None = None,
+    *,
+    kv_splits: int,
+    scale: float | None = None,
+    exp_table: LutTable | None = None,
+    softcap: float | None = None,
+    window: int | None = None,
+) -> Array:
+    """KV-split (flash-decode) oracle for the paged decode kernel.
+
+    Splits the block-table walk into `kv_splits` contiguous runs of
+    pages; each split computes online-softmax partials (m, l, acc) over
+    only its own pages, and the combine pass merges the stacked partials
+    with `distributed.collectives.merge_partial_softmax_stacked` — the
+    same log-sum-exp algebra as the mesh-axis merge, over a local axis.
+
+    This is also the *fast* long-context reference on CPU hosts: each
+    scan iteration gathers only its split's pages, so the gathered
+    working set stays cache-resident instead of materializing the whole
+    context (benchmarks/paged_serving.py part 9 gates the speedup).
+    Splits past the end of the table read the trash page; their
+    positions are >= length, so they contribute empty partials
+    (m=-1e30 sentinel, l=0) that the merge's finite guard absorbs —
+    including the all-empty length-0 edge.
+
+    Same signature as `paged_attention_ref` plus `kv_splits`; results
+    match the unsplit oracle to float-associativity tolerance (~1e-6),
+    not bit-exactly.
+    """
+    from repro.distributed.collectives import merge_partial_softmax_stacked
+    from repro.serving.quantize import unpack_int4
+
+    B, H, Dh = q.shape
+    Hkv, page = k_pages.shape[1], k_pages.shape[2]
+    n_pages = block_tables.shape[1]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / (Dh**0.5)
+    packed = 2 * k_pages.shape[-1] == Dh
+
+    splits = max(1, min(kv_splits, n_pages))
+    pps = -(-n_pages // splits)                  # pages per split
+    pad = pps * splits - n_pages
+    # Pad with the trash page: its positions are >= length, so masked.
+    tbls = jnp.pad(block_tables, ((0, 0), (0, pad))).reshape(
+        B, splits, pps)
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, Dh)
+    S_s = pps * page
+    lens = jnp.broadcast_to(jnp.asarray(length), (B,))
+    NEG = -1e30
+
+    def gather(pages, scales, tbl_s):
+        x = jnp.moveaxis(pages[tbl_s], 2, 1).reshape(
+            B, Hkv, S_s, pages.shape[-1])
+        if packed:
+            x = unpack_int4(x)
+        if scales is not None:
+            s = jnp.moveaxis(scales[tbl_s], 2, 1).reshape(B, Hkv, S_s)
+            x = x.astype(jnp.float32) * s[..., None].astype(jnp.float32)
+        return x.astype(jnp.float32)
+
+    def body(_, si_tbl):
+        s_idx, tbl_s = si_tbl
+        x = gather(k_pages, k_scales, tbl_s)
+        y = gather(v_pages, v_scales, tbl_s)
+        scores = jnp.einsum("bhgd,bhsd->bhgs", qf, x) * scale
+        if softcap is not None:
+            scores = softcap * jnp.tanh(scores / softcap)
+        pos = s_idx * S_s + jnp.arange(S_s)
+        mask = pos[None, :] < lens[:, None]
+        if window is not None:
+            mask = mask & (pos[None, :] >= (lens[:, None] - window))
+        mb = mask[:, None, None, :]
+        scores = jnp.where(mb, scores, NEG)
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        if exp_table is not None:
+            e = lut_lib.apply_table(scores - m, exp_table)
+        else:
+            e = jnp.exp(scores - m)
+        e = jnp.where(mb, e, 0.0)
+        l = jnp.sum(e, axis=-1, keepdims=True)
+        acc = jnp.einsum("bhgs,bhsd->bhgd", e, y)
+        return None, (m, l, acc)
+
+    _, (m, l, acc) = jax.lax.scan(
+        body, None, (jnp.arange(splits), jnp.moveaxis(tbls, 1, 0)))
+    out = merge_partial_softmax_stacked(m, l, acc, axis=0)
+    return out.reshape(B, H, Dh).astype(q.dtype)
 
 
 def paged_prefill_attention_ref(
@@ -274,8 +402,8 @@ def paged_prefill_attention_ref(
     scale = scale if scale is not None else 1.0 / (D**0.5)
     # Gather to (B, Hkv, S, D), then seq-major (B, S, Hkv, D) — the dense
     # prefill K/V layout (never a materialized transpose of head_dim).
-    k = _gather_paged_kv(k_pages, k_scales, block_tables)
-    v = _gather_paged_kv(v_pages, v_scales, block_tables)
+    k = _gather_paged_kv(k_pages, k_scales, block_tables, head_dim=D)
+    v = _gather_paged_kv(v_pages, v_scales, block_tables, head_dim=D)
     k = jnp.moveaxis(k, 1, 2)
     v = jnp.moveaxis(v, 1, 2)
 

@@ -151,9 +151,12 @@ def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
 
     kv_dtype None defers to cfg.kv_dtype ("model" = compute dtype;
     "int8" = int8 payload pools + scale-row pools, whose storage
-    `kv_scale_dtype` is f32 by default or bf16 for (Dh + 2) B/vector).
-    With `mesh`, the pools are placed sharded over their KV-head axis
-    (lengths/block tables replicated) via `kvcache.shard_cache`."""
+    `kv_scale_dtype` is f32 by default or bf16 for (Dh + 2) B/vector;
+    "int4" = nibble-packed pools with payload axis Dh/2 + bf16 scale
+    rows, (Dh/2 + 2) B/vector). With `mesh`, the pools are placed
+    sharded over their KV-head axis (lengths/block tables replicated)
+    via `kvcache.shard_cache` — packed pools shard identically since
+    the payload axis is never the sharded axis."""
     from repro.serving.kvcache import init_paged_cache as _init
     from repro.serving.kvcache import shard_cache
     if cfg.family not in ("dense", "moe"):

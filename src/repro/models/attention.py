@@ -192,8 +192,9 @@ def attention_prefill_chunk_paged(
     into pool pages, then attend over all resident KV [0, start+S) read
     back through the block table (earlier chunks included). Returns
     (out, k_pages', v_pages') — there is no dense K/V to scatter later.
-    int8 pools (scale rows given) quantize the chunk at write time and
-    return (out, k_pages', v_pages', k_scale', v_scale').
+    int8/int4 pools (scale rows given) quantize the chunk at write time
+    (int4: nibble-packed by the append) and return
+    (out, k_pages', v_pages', k_scale', v_scale').
 
     Under an active mesh (engine `mesh=`) the append + attention run
     inside `shard_map`: each shard appends its KV-head slice of the
@@ -364,8 +365,9 @@ def attention_decode_paged(
     v_scale: Array | None = None,
 ):
     """One decode step against a paged cache; returns (out, k', v').
-    int8 pools (scale rows given) quantize the append at write time and
-    return (out, k', v', k_scale', v_scale').
+    int8/int4 pools (scale rows given) quantize the append at write
+    time (int4: nibble-packed) and return
+    (out, k', v', k_scale', v_scale').
 
     Under an active mesh (engine `mesh=`) the append + attention run
     inside `shard_map` on per-shard head slices — the memory-bound pool

@@ -401,7 +401,9 @@ def _paged_chunk_forward(params: dict, tokens: Array, block_tables: Array,
                          f"{cfg.family!r}")
     if k_pages.dtype == jnp.int8 and k_scales is None:
         # Without this the fp write branch would astype float K/V to
-        # int8 — silent garbage instead of a quantized write.
+        # int8 — silent garbage instead of a quantized write. (int4
+        # pools are int8-dtype with a packed payload axis, so this
+        # guard covers them too.)
         raise ValueError("int8 page pools need their scale pools: pass "
                          "k_scales/v_scales from the PagedCache")
     B, S = tokens.shape

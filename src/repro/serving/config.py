@@ -97,6 +97,12 @@ class EngineConfig:
     telemetry: Optional[Telemetry] = None
     seed: int = 0
     mesh: Optional[jax.sharding.Mesh] = None
+    # KV-split (flash-decode) autotune knob: split paged decode
+    # attention's page walk into this many online-softmax partials,
+    # merged by merge_partial_softmax_stacked. None/1 = single walk;
+    # the kernel layer auto-disables splitting below
+    # KV_SPLIT_MIN_CONTEXT resident tokens regardless of the knob.
+    kv_splits: Optional[int] = None
 
     @classmethod
     def from_legacy_kwargs(cls, **kwargs) -> "EngineConfig":
@@ -147,17 +153,37 @@ class EngineConfig:
                     "backend prefills whole prompts into per-slot arenas "
                     "and would silently ignore the chunk budget")
         resolved_kv = self.resolved_kv_dtype(model_cfg)
-        if resolved_kv not in ("model", "int8"):
+        if resolved_kv not in ("model", "int8", "int4"):
             raise ValueError(f"unknown kv_cache_dtype {resolved_kv!r}")
         if self.kv_cache_dtype is not None and not self.paged \
                 and self.kv_cache_dtype != model_cfg.kv_dtype:
             raise ValueError(
                 "kv_cache_dtype selects the paged pool storage; the dense "
                 "backend's arena dtype comes from cfg.kv_dtype")
-        if self.kv_scale_dtype != "float32" and resolved_kv != "int8":
+        if self.kv_scale_dtype != "float32" \
+                and resolved_kv not in ("int8", "int4"):
             raise ValueError(
-                "kv_scale_dtype selects the int8 pools' scale-row "
+                "kv_scale_dtype selects the int8/int4 pools' scale-row "
                 "storage; fp pools have no scale rows")
+        if resolved_kv == "int4":
+            if model_cfg.head_dim % 2:
+                raise ValueError(
+                    "kv_cache_dtype='int4' packs two values per byte and "
+                    f"needs an even head_dim, got {model_cfg.head_dim}")
+            if self.kv_scale_dtype != "bfloat16":
+                raise ValueError(
+                    "kv_cache_dtype='int4' requires "
+                    "kv_scale_dtype='bfloat16': f32 scale rows would "
+                    "spend the bytes the nibble packing just saved")
+        if self.kv_splits is not None:
+            if self.kv_splits < 1:
+                raise ValueError(
+                    f"kv_splits must be >= 1, got {self.kv_splits}")
+            if self.kv_splits > 1 and not self.paged:
+                raise ValueError(
+                    "kv_splits requires paged=True: the KV-split path "
+                    "partitions the block-table page walk; the dense "
+                    "backend has no pages to split")
         if self.speculative is not None:
             self.speculative.validate()
             if not self.paged:

@@ -224,6 +224,21 @@ class ServingEngine:
     int8 scale rows default to f32; `kv_scale_dtype="bfloat16"` stores
     them in bf16 — (Dh + 2) instead of (Dh + 4) bytes per vector.
 
+    `kv_cache_dtype="int4"` packs two KV values per byte ((Dh/2 + 2)
+    bytes per vector — half of int8 again; requires
+    `kv_scale_dtype="bfloat16"`). Same write-time quantization and
+    in-kernel unpack+dequant contract; with `num_pages=None` the fp
+    byte budget holds ~4-8x the pages. Quantization noise is ~1/7 per
+    vector — still greedy-exact on the repo's smoke workloads, but
+    validate on your own.
+
+    `kv_splits=K` (paged mode) turns long-context decode attention into
+    the KV-split (flash-decode) form: the block-table walk is split
+    into K online-softmax partials merged by
+    `merge_partial_softmax_stacked`. Engaged only above
+    `KV_SPLIT_MIN_CONTEXT` resident tokens; outputs match the single
+    walk to float tolerance (~1e-6), not bit-exactly.
+
     `speculative=SpecConfig(...)` (paged + greedy only) turns decode
     steps into draft-verify rounds (serving/speculative.py): a drafter
     proposes k tokens, one verify pass scores all of them against the
@@ -313,6 +328,13 @@ class ServingEngine:
         paged = config.paged
         self.params = params
         self.cfg = model_cfg
+        # The KV-split autotune knob rides the SalPim engine config so
+        # it reaches paged_decode_attention with zero model-layer
+        # signature changes (the engine closes over it inside jit).
+        if config.kv_splits is not None and config.kv_splits > 1:
+            engine = dataclasses.replace(
+                engine, config=dataclasses.replace(
+                    engine.config, kv_splits=config.kv_splits))
         self.engine = engine
         self.slots = slots
         self.max_len = max_len
@@ -364,9 +386,10 @@ class ServingEngine:
 
         self.paged = paged
         self.prefill_chunk_tokens = config.prefill_chunk_tokens
-        # KV pool storage: "model" (compute dtype) or "int8" (int8 pages
-        # + f32 scale rows, quantized at write time, dequantized in the
-        # paged kernels). None defers to the model config's kv_dtype.
+        # KV pool storage: "model" (compute dtype), "int8" (int8 pages
+        # + scale rows, quantized at write time, dequantized in the
+        # paged kernels) or "int4" (nibble-packed pages + bf16 scale
+        # rows). None defers to the model config's kv_dtype.
         resolved_kv = config.resolved_kv_dtype(model_cfg)
         self.kv_cache_dtype = resolved_kv
         self.kv_scale_dtype = config.kv_scale_dtype

@@ -66,6 +66,21 @@ int8 page pools (kv_dtype="int8"):
   mantissa for another ~3% of bandwidth. COW forks copy the scale rows
   alongside the pages — a fork must never alias its donor's scales.
 
+int4 page pools (kv_dtype="int4"):
+
+  The same scale-row plumbing carried one step further: payload pools
+  pack two 4-bit values per byte (`serving/quantize.quantize_vec_int4`,
+  halves convention — byte i holds element i low-nibble and element
+  i + Dh/2 high-nibble), so the pool's last axis is Dh/2 and a KV
+  vector costs (Dh/2 + 2) bytes with the mandatory bf16 scales — half
+  of int8's bytes again. Everything downstream detects packing
+  structurally: a pool whose last axis is half the model head_dim is
+  int4 (`2 * pool.shape[-1] == Dh`), so the appends pack at write time
+  and the kernels/oracles unpack+dequantize after the page DMA with no
+  extra dtype flag threaded through the stack. COW forks, swap blobs,
+  rewinds, and the prefix cache treat packed payloads as opaque int8
+  bytes and need no changes.
+
 Speculative rollback (draft-verify serving):
 
   The speculative decoding subsystem (`serving/speculative.py`) writes
@@ -120,7 +135,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.quantize import quantize_vec
+from repro.serving.quantize import quantize_vec, quantize_vec_int4
 from repro.serving.telemetry import NULL_TELEMETRY
 
 Array = jax.Array
@@ -179,6 +194,10 @@ def page_kv_bytes(cfg, page_size: int, kv_dtype: str = "model",
         # 2 B with kv_scale_dtype="bfloat16".
         sc = jnp.dtype(kv_scale_dtype).itemsize
         return 2 * unit * (cfg.head_dim * 1 + sc)
+    if kv_dtype == "int4":
+        # two nibbles per byte: Dh/2 payload bytes + one scale per vector.
+        sc = jnp.dtype(kv_scale_dtype).itemsize
+        return 2 * unit * (cfg.head_dim // 2 + sc)
     return 2 * unit * cfg.head_dim * jnp.dtype(cfg.cdtype).itemsize
 
 
@@ -190,7 +209,9 @@ def init_paged_cache(cfg, batch: int, num_pages: int, page_size: int,
     kv_dtype "model" stores pages in `dtype` (default cfg.cdtype);
     "int8" stores int8 payload pools plus scale-row pools in
     `kv_scale_dtype` ("float32" default; "bfloat16" halves the scale
-    overhead to (Dh + 2) B/vector).
+    overhead to (Dh + 2) B/vector); "int4" packs two values per byte —
+    payload pools of last axis Dh/2 — plus the same scale rows
+    ((Dh/2 + 2) B/vector with bf16 scales).
     """
     dtype = dtype or cfg.cdtype
     L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
@@ -199,8 +220,12 @@ def init_paged_cache(cfg, batch: int, num_pages: int, page_size: int,
     tables = jnp.full((batch, max_pages), TRASH_PAGE, jnp.int32)
     if kv_scale_dtype not in _SCALE_DTYPES:
         raise ValueError(f"unknown kv_scale_dtype {kv_scale_dtype!r}")
-    if kv_dtype == "int8":
+    if kv_dtype in ("int8", "int4"):
         sdt = jnp.dtype(kv_scale_dtype)
+        if kv_dtype == "int4":
+            if Dh % 2:
+                raise ValueError("int4 KV pools need an even head_dim")
+            shape = shape[:-1] + (Dh // 2,)
         return PagedCache(
             lengths=lengths,
             block_tables=tables,
@@ -267,18 +292,23 @@ def append_kv_pages(k_pages: Array, v_pages: Array, block_tables: Array,
     k_new/v_new: (B, Hkv, Dh). Slots whose logical page is unmapped hit
     the trash page (block tables default to 0 there).
 
-    With scale pools (k_scale/v_scale (P, Hkv, page), int8 mode) the new
-    vectors are amax-quantized here — at write time — and the int8
-    payload plus its scale land in the same (page, offset); returns
-    (k_pages, v_pages, k_scale, v_scale). Without, returns the 2-tuple.
+    With scale pools (k_scale/v_scale (P, Hkv, page), int8/int4 mode)
+    the new vectors are amax-quantized here — at write time — and the
+    narrow payload plus its scale land in the same (page, offset);
+    returns (k_pages, v_pages, k_scale, v_scale). Without, returns the
+    2-tuple. A pool whose last axis is half the incoming head_dim is
+    int4: the write packs two nibbles per byte.
     """
     page = k_pages.shape[2]
     logical = lengths // page
     phys = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
     off = lengths % page
     if k_scale is not None:
-        k_q, k_sc = quantize_vec(k_new, scale_dtype=k_scale.dtype)
-        v_q, v_sc = quantize_vec(v_new, scale_dtype=v_scale.dtype)
+        quant = (quantize_vec_int4
+                 if 2 * k_pages.shape[-1] == k_new.shape[-1]
+                 else quantize_vec)
+        k_q, k_sc = quant(k_new, scale_dtype=k_scale.dtype)
+        v_q, v_sc = quant(v_new, scale_dtype=v_scale.dtype)
         k_pages = k_pages.at[phys, :, off].set(k_q)
         v_pages = v_pages.at[phys, :, off].set(v_q)
         k_scale = k_scale.at[phys, :, off].set(k_sc)
@@ -358,8 +388,9 @@ def append_chunk_kv_pages(k_pages: Array, v_pages: Array,
     in `block_tables` — rows whose table entries are trash scribble into
     the trash page harmlessly, like `append_kv_pages`.
 
-    With scale pools (int8 mode) the chunk is amax-quantized per
-    (token, head) vector at write time; payload and scales land at the
+    With scale pools (int8/int4 mode) the chunk is amax-quantized per
+    (token, head) vector at write time; payload (nibble-packed when the
+    pool's last axis is half the chunk head_dim) and scales land at the
     same (page, offset) and the 4-tuple is returned.
     """
     page = k_pages.shape[2]
@@ -371,8 +402,11 @@ def append_chunk_kv_pages(k_pages: Array, v_pages: Array,
     # Advanced indices (B, S) around the Hkv slice: result dims lead, so
     # the update payload is chunk-major (B, S, Hkv, Dh) — no transpose.
     if k_scale is not None:
-        k_q, k_sc = quantize_vec(k_new, scale_dtype=k_scale.dtype)
-        v_q, v_sc = quantize_vec(v_new, scale_dtype=v_scale.dtype)
+        quant = (quantize_vec_int4
+                 if 2 * k_pages.shape[-1] == k_new.shape[-1]
+                 else quantize_vec)
+        k_q, k_sc = quant(k_new, scale_dtype=k_scale.dtype)
+        v_q, v_sc = quant(v_new, scale_dtype=v_scale.dtype)
         k_pages = k_pages.at[phys, :, off].set(k_q)
         v_pages = v_pages.at[phys, :, off].set(v_q)
         k_scale = k_scale.at[phys, :, off].set(k_sc)

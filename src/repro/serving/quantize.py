@@ -98,6 +98,53 @@ def dequantize_vec(q: Array, scale: Array, dtype) -> Array:
             * scale[..., None].astype(jnp.float32)).astype(dtype)
 
 
+def pack_int4(q: Array) -> Array:
+    """(..., D) int values in [-8, 7] -> (..., D/2) int8, two nibbles/byte.
+
+    Halves convention (not interleaved): byte i holds element i in the low
+    nibble and element i + D/2 in the high nibble, so `unpack_int4` is a
+    pair of lane-friendly shifts plus one concat — no stride-2 shuffles.
+    """
+    d = q.shape[-1]
+    assert d % 2 == 0, "int4 packing needs an even head_dim"
+    lo = q[..., : d // 2].astype(jnp.int8)
+    hi = q[..., d // 2:].astype(jnp.int8)
+    return ((hi << 4) | (lo & 0x0F)).astype(jnp.int8)
+
+
+def unpack_int4(p: Array) -> Array:
+    """(..., D/2) int8 packed -> (..., D) int8 in [-8, 7].
+
+    Arithmetic shifts sign-extend each nibble: low nibble via `<<4 >>4`,
+    high nibble via `>>4`. Exact inverse of `pack_int4`.
+    """
+    lo = jnp.right_shift(jnp.left_shift(p, 4), 4)
+    hi = jnp.right_shift(p, 4)
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
+def quantize_vec_int4(x: Array, scale_dtype=jnp.float32
+                      ) -> tuple[Array, Array]:
+    """(..., D) -> ((..., D/2) packed int8 payload, (...) scale).
+
+    Same symmetric-amax convention as `quantize_vec` with the int4 range
+    (amax/7, clip to [-7, 7]) and nibble packing via `pack_int4`. The
+    paged int4 pools store bf16 scales, giving (D/2 + 2) bytes per KV
+    vector — half of int8's (D + 2) again at D >> 4.
+    """
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / 7.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -7, 7).astype(jnp.int8)
+    return pack_int4(q), scale.astype(scale_dtype)
+
+
+def dequantize_vec_int4(p: Array, scale: Array, dtype) -> Array:
+    """Exact inverse read of `quantize_vec_int4`: unpack, scale, cast."""
+    return (unpack_int4(p).astype(jnp.float32)
+            * scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
 def qtensor_linear(x: Array, q: QTensor, b: Array | None = None) -> Array:
     """x (..., C) @ QTensor (R, C) -> (..., R); native s8 x s8 -> s32 dot."""
     lead = x.shape[:-1]
