@@ -237,6 +237,17 @@ def main():
                       f"p50 {h['p50'] * 1e3:.1f} ms / "
                       f"p99 {h['p99'] * 1e3:.1f} ms "
                       f"({h['total']} gaps)")
+        # Roofline: modeled traffic against measured phase time — where
+        # each phase sits relative to the hardware's memory/compute
+        # roofs (docs/observability.md).
+        roof = snap["roofline"]
+        for phase, r in roof["phases"].items():
+            if r["sec"] <= 0:
+                continue
+            print(f"roofline: {phase:<13} {r['achieved_gbps']:.3f} GB/s "
+                  f"achieved on {roof['hardware']['name']} "
+                  f"(intensity {r['arithmetic_intensity']:.2f} FLOP/B, "
+                  f"{r['bound']}-bound)")
         if args.trace_out:
             n = telemetry.export_chrome_trace(args.trace_out)
             print(f"telemetry: wrote {args.trace_out} ({n} trace events, "

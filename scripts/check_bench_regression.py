@@ -1,0 +1,230 @@
+#!/usr/bin/env python
+"""Gate a fresh bench summary against the tracked trajectory record.
+
+`BENCH_smoke.json` is the repo's cross-PR perf record; this checker is
+what makes it a *gate* instead of a diary. It compares a candidate
+summary (the smoke run CI just produced) against a baseline (the
+tracked file from the commit under test) with direction-aware,
+per-metric tolerance bands:
+
+- Wall-clock metrics (`*_ms*`, `*_sec`, rates) run on shared CI hosts,
+  so their bands are wide and catch only catastrophic regressions —
+  a latency may grow 2x before the gate trips, a throughput may halve.
+  Improvements never fail.
+- Structural metrics (byte counts, page/byte ratios, modeled roofline
+  ratios) are machine-independent: they may drift at most 5% in either
+  direction, because any drift at all means the pool layout, the
+  kernel DMA contract, or the cost model changed without its tests.
+- Correctness metrics are absolute: exact-match counts must not
+  decrease, boolean invariants (`mesh_bit_identical`) must hold, and
+  the telemetry overhead ratio must stay under its ceiling no matter
+  what the baseline said.
+- Schema may grow, not shrink: candidate keys absent from the baseline
+  are fine (new bench parts land constantly); baseline keys missing
+  from the candidate fail, unless the candidate's `meta.schema_version`
+  is newer — a deliberate schema bump may rename fields, and the bump
+  itself is the audit trail.
+
+Usage:
+
+    python scripts/check_bench_regression.py \
+        --baseline BENCH_smoke.json --candidate bench_smoke.json
+    python scripts/check_bench_regression.py --self-test
+
+`--self-test` runs the checker against synthetic regressions (latency
+blowup, byte drift, lost exact-match, dropped key) and fails unless
+every one is caught and a clean pass still passes — CI runs it before
+trusting the real comparison.
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+
+# (pattern, rule, tolerance). First match wins; unmatched numeric keys
+# are informational (reported, never gated). Rules:
+#   lower_better  candidate <= baseline * (1 + tol)
+#   higher_better candidate >= baseline * (1 - tol)
+#   structural    |candidate/baseline - 1| <= tol
+#   non_decrease  candidate >= baseline
+#   truthy        bool(candidate) is True
+#   ceiling       candidate <= tol (absolute, baseline-independent)
+#   informational reported, never gated (explicit opt-out from a
+#                 broader pattern below)
+RULES = [
+    # Correctness before anything else (these also end in _ratio/_rate).
+    (re.compile(r".*exact_match$"), "non_decrease", None),
+    (re.compile(r"mesh_bit_identical$"), "truthy", None),
+    (re.compile(r"telemetry_overhead_ratio$"), "ceiling", 1.08),
+    (re.compile(r"sched_goodput"), "higher_better", 0.25),
+    (re.compile(r"spec_acceptance_rate$"), "higher_better", 0.5),
+    (re.compile(r"telemetry_prefix_cache_hit_rate$"),
+     "higher_better", 0.5),
+    # Structural: machine-independent bytes / ratios / counts.
+    (re.compile(r".*_kv_bytes_.*|.*byte_ratio.*|.*pages_ratio$"),
+     "structural", 0.05),
+    (re.compile(r"roofline_kv_ratio_.*"), "structural", 0.05),
+    (re.compile(r"peak_pages$|prefill_tokens_saved$"), "structural", 0.05),
+    # Part 9a's kernel study times one 8k-context attention call —
+    # absolute ms swings well past 2x with host thread count (e.g. the
+    # fake-device flag splits CPU threads 8 ways). The within-run
+    # kvsplit_ratio below is the gated signal.
+    (re.compile(r"kvsplit_ms_"), "informational", None),
+    # Wall-clock: wide, host-speed-dependent, direction-aware.
+    (re.compile(r".*_ms(_|$).*|.*_sec$|.*ms_per_token.*|.*step_ms.*"),
+     "lower_better", 1.0),
+    (re.compile(r"tokens_per_sec$"), "higher_better", 0.5),
+    (re.compile(r"kvsplit_ratio$"), "lower_better", 0.5),
+    (re.compile(r"sched_p99_gap_steps_slo$"), "lower_better", 1.0),
+]
+
+# Baseline keys whose absence in the candidate is never an error: run
+# context, not measurements.
+CONTEXT_KEYS = {"arch", "requests", "kv_cache_dtype", "meta"}
+
+
+def _rule_for(key):
+    for pat, rule, tol in RULES:
+        if pat.fullmatch(key) or pat.match(key):
+            return rule, tol
+    return None, None
+
+
+def _numeric(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def check(baseline, candidate):
+    """Returns (failures, notes): failures is a list of human-readable
+    gate violations, notes the informational drift report."""
+    failures, notes = [], []
+    base_schema = (baseline.get("meta") or {}).get("schema_version", 0)
+    cand_schema = (candidate.get("meta") or {}).get("schema_version", 0)
+    schema_bumped = cand_schema > base_schema
+
+    for key in sorted(baseline):
+        if key in CONTEXT_KEYS:
+            continue
+        if key not in candidate:
+            if schema_bumped:
+                notes.append(f"{key}: dropped under schema bump "
+                             f"{base_schema} -> {cand_schema}")
+            else:
+                failures.append(
+                    f"{key}: present in baseline, missing from candidate "
+                    "(schema may only shrink via a schema_version bump)")
+            continue
+        b, c = baseline[key], candidate[key]
+        rule, tol = _rule_for(key)
+        if rule == "informational":
+            rule = None
+        if rule is None or not (_numeric(b) or rule == "truthy"):
+            if b != c and (_numeric(b) or isinstance(b, str)):
+                notes.append(f"{key}: {b} -> {c} (informational)")
+            continue
+        if rule == "truthy":
+            if not c:
+                failures.append(f"{key}: must hold, candidate has {c!r}")
+        elif rule == "ceiling":
+            if c > tol:
+                failures.append(f"{key}: {c:.4f} exceeds ceiling {tol}")
+        elif rule == "non_decrease":
+            if c < b:
+                failures.append(f"{key}: {c} < baseline {b} "
+                                "(correctness count decreased)")
+        elif rule == "lower_better":
+            if b > 0 and c > b * (1 + tol):
+                failures.append(
+                    f"{key}: {c:.4f} vs baseline {b:.4f} "
+                    f"({c / b:.2f}x, band allows {1 + tol:.2f}x)")
+        elif rule == "higher_better":
+            if b > 0 and c < b * (1 - tol):
+                failures.append(
+                    f"{key}: {c:.4f} vs baseline {b:.4f} "
+                    f"({c / b:.2f}x, band allows >= {1 - tol:.2f}x)")
+        elif rule == "structural":
+            if b != 0 and abs(c / b - 1.0) > tol:
+                failures.append(
+                    f"{key}: {c} vs baseline {b} "
+                    f"({abs(c / b - 1) :.1%} drift, structural band "
+                    f"is {tol:.0%})")
+    for key in sorted(set(candidate) - set(baseline) - CONTEXT_KEYS):
+        notes.append(f"{key}: new in candidate (allowed)")
+    return failures, notes
+
+
+def self_test(baseline):
+    """The checker checking itself: a clean pass must pass, and each
+    injected regression class must fail on exactly the injected key."""
+    clean, _ = check(baseline, dict(baseline))
+    assert not clean, f"identical summaries flagged: {clean}"
+
+    def expect_fail(mutate, what):
+        cand = json.loads(json.dumps(baseline))
+        key = mutate(cand)
+        failures, _ = check(baseline, cand)
+        assert any(f.startswith(f"{key}:") for f in failures), \
+            f"checker missed {what}: {failures}"
+
+    expect_fail(lambda c: c.__setitem__(
+        "telemetry_step_ms_on",
+        baseline["telemetry_step_ms_on"] * 10) or "telemetry_step_ms_on",
+        "a 10x latency blowup")
+    expect_fail(lambda c: c.__setitem__(
+        "peak_kv_bytes_int8",
+        baseline["peak_kv_bytes_int8"] * 2) or "peak_kv_bytes_int8",
+        "a structural byte drift")
+    expect_fail(lambda c: c.__setitem__(
+        "int8_exact_match",
+        baseline["int8_exact_match"] - 1) or "int8_exact_match",
+        "a lost exact-match")
+    expect_fail(lambda c: c.__setitem__(
+        "telemetry_overhead_ratio", 1.5) or "telemetry_overhead_ratio",
+        "an overhead-ceiling breach")
+    expect_fail(lambda c: c.pop("tokens_per_sec") and "tokens_per_sec",
+        "a dropped key without a schema bump")
+
+    # A schema bump legitimizes the same dropped key.
+    cand = json.loads(json.dumps(baseline))
+    cand.pop("tokens_per_sec")
+    cand.setdefault("meta", {})
+    cand["meta"] = dict(cand["meta"],
+                        schema_version=(baseline.get("meta") or {})
+                        .get("schema_version", 0) + 1)
+    failures, _ = check(baseline, cand)
+    assert not failures, f"schema bump did not excuse the drop: {failures}"
+    print("self-test: clean pass passes, all injected regressions caught")
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--baseline", default="BENCH_smoke.json",
+                    help="tracked trajectory record (the gate)")
+    ap.add_argument("--candidate", default="bench_smoke.json",
+                    help="fresh summary to admit")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the checker catches injected "
+                         "regressions against --baseline, then exit")
+    args = ap.parse_args()
+
+    baseline = json.loads(pathlib.Path(args.baseline).read_text())
+    if args.self_test:
+        self_test(baseline)
+        return
+    candidate = json.loads(pathlib.Path(args.candidate).read_text())
+    failures, notes = check(baseline, candidate)
+    for n in notes:
+        print(f"  note: {n}")
+    if failures:
+        print(f"bench regression vs {args.baseline}:",
+              *failures, sep="\n  FAIL ")
+        sys.exit(1)
+    print(f"{args.candidate}: no regressions vs {args.baseline} "
+          f"({len(notes)} informational notes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -86,6 +86,31 @@ def effective_kv_splits(kv_splits: int | None, n_pages: int,
     return min(kv_splits, n_pages)
 
 
+def kv_vector_bytes(head_dim: int, kv_dtype: str = "model",
+                    kv_scale_dtype: str = "float32",
+                    payload_dtype="float32") -> int:
+    """HBM bytes one (token, head) K-or-V vector costs this kernel's DMA.
+
+    This is the byte contract of the page BlockSpecs above — what one
+    row of a page payload block (plus its scale-row element, when the
+    pool is quantized) actually moves per vector:
+
+        fp pools:   Dh * itemsize(payload_dtype)
+        int8 pools: Dh + itemsize(scale)      (4 f32 / 2 bf16 scales)
+        int4 pools: Dh/2 + itemsize(scale)    (nibble-packed payload)
+
+    `serving/kvcache.page_kv_bytes` (pool sizing / admission budgets)
+    and `serving/costmodel` (the roofline model) both derive from this
+    single definition, so modeled traffic can never drift from what the
+    kernels DMA.
+    """
+    if kv_dtype == "int8":
+        return head_dim + jnp.dtype(kv_scale_dtype).itemsize
+    if kv_dtype == "int4":
+        return head_dim // 2 + jnp.dtype(kv_scale_dtype).itemsize
+    return head_dim * jnp.dtype(payload_dtype).itemsize
+
+
 def _dequant_page(x_ref, sc_ref, packed):
     """One page payload block -> f32 (page_size, D): int4 nibble unpack
     (arithmetic shifts sign-extend; halves concat, no stride-2 shuffle)

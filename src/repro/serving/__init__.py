@@ -13,15 +13,18 @@ drafters, sampling), but engine construction, configuration, policy
 and observability all have their canonical names here.
 """
 from repro.serving.config import EngineConfig, GenConfig
+from repro.serving.costmodel import CostModel, HardwareSpec
 from repro.serving.engine import Request, ServingEngine, generate
 from repro.serving.scheduler import FifoScheduler, Scheduler, SloScheduler
 from repro.serving.speculative import SpecConfig
 from repro.serving.telemetry import Telemetry
 
 __all__ = [
+    "CostModel",
     "EngineConfig",
     "FifoScheduler",
     "GenConfig",
+    "HardwareSpec",
     "Request",
     "Scheduler",
     "ServingEngine",

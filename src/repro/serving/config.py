@@ -103,6 +103,11 @@ class EngineConfig:
     # the kernel layer auto-disables splitting below
     # KV_SPLIT_MIN_CONTEXT resident tokens regardless of the knob.
     kv_splits: Optional[int] = None
+    # Roofline target for the cost model's memory/compute-bound
+    # classification: a key of costmodel.HARDWARE_SPECS ("hbm2",
+    # "salpim-hbm2", "tpu-v4", ...). None = detect from the jax
+    # backend. Purely observational — never changes what runs.
+    hardware: Optional[str] = None
 
     @classmethod
     def from_legacy_kwargs(cls, **kwargs) -> "EngineConfig":
@@ -175,6 +180,12 @@ class EngineConfig:
                     "kv_cache_dtype='int4' requires "
                     "kv_scale_dtype='bfloat16': f32 scale rows would "
                     "spend the bytes the nibble packing just saved")
+        if self.hardware is not None:
+            from repro.serving.costmodel import HARDWARE_SPECS
+            if self.hardware not in HARDWARE_SPECS:
+                raise ValueError(
+                    f"unknown hardware {self.hardware!r}; known roofline "
+                    f"specs: {sorted(HARDWARE_SPECS)}")
         if self.kv_splits is not None:
             if self.kv_splits < 1:
                 raise ValueError(

@@ -30,6 +30,7 @@ from repro.models import api as model_api
 from repro.serving import kvcache as kv
 from repro.models.config import ModelConfig
 from repro.serving.config import EngineConfig, GenConfig
+from repro.serving.costmodel import CostModel, StepShape
 from repro.serving.sampling import sample
 from repro.serving.scheduler import FifoScheduler, Scheduler, SwappedRequest
 from repro.serving.speculative import SpecConfig, greedy_accept, make_drafter
@@ -383,6 +384,19 @@ class ServingEngine:
         self._verify_sec = 0.0
         self._decode_sec = 0.0
         self._step_idx = 0
+        # Roofline cost model (serving/costmodel.py): modeled bytes and
+        # FLOPs per phase, accumulated every step from the live state —
+        # cheap host arithmetic, always on like the phase timers above.
+        # stats()["roofline"] combines them with the phase wall times;
+        # telemetry additionally gets the per-step breakdown.
+        self.cost_model = CostModel.from_configs(model_cfg, config)
+        self._phase_bytes = {p: 0.0 for p in
+                             ("admit", "chunk_prefill", "draft",
+                              "verify", "decode")}
+        self._phase_flops = dict(self._phase_bytes)
+        self._shape: Optional[StepShape] = None
+        if self.telemetry.enabled:
+            self.telemetry.attach_roofline(self.cost_model.describe())
 
         self.paged = paged
         self.prefill_chunk_tokens = config.prefill_chunk_tokens
@@ -579,6 +593,8 @@ class ServingEngine:
         req.prefill_cursor = len(req.prompt)
         self._host_len[slot] = len(req.prompt)
         self.active[slot] = req
+        if self._shape is not None:
+            self._shape.admit_prompt_tokens += len(req.prompt)
 
     def _admit_queued(self, req: Request, slot: int,
                       reserve: bool = True) -> bool:
@@ -835,6 +851,8 @@ class ServingEngine:
             self._host_len[slot] = end
         self.cache = self._kv.PagedCache(lengths, tables, nk, nv, nks, nvs)
         self.peak_pages = max(self.peak_pages, self.allocator.used_pages)
+        if self._shape is not None:
+            self._shape.chunk = (start, end - start)
         if tel.enabled:
             tel.chunk(req.uid, t0c, tel.now(), end - start)
 
@@ -891,12 +909,21 @@ class ServingEngine:
         before = ((self._admit_sec, self._chunk_sec, self._draft_sec,
                    self._verify_sec, self._decode_sec)
                   if tel.enabled else None)
+        self._shape = StepShape()
         try:
             with tel.step_annotation(self._step_idx):
                 return self._step_inner()
         finally:
             dur = time.perf_counter() - t_start
             self._step_sec += dur
+            # Price the step: modeled bytes/FLOPs per phase from what
+            # actually ran (always on — host arithmetic over a handful
+            # of ints; serving outputs are untouched).
+            costs = self.cost_model.step_costs(self._shape)
+            self._shape = None
+            for phase, c in costs.items():
+                self._phase_bytes[phase] += c.bytes
+                self._phase_flops[phase] += c.flops
             if tel.enabled:
                 a = self.allocator
                 tel.record_step(
@@ -911,7 +938,9 @@ class ServingEngine:
                     a.available_pages if a is not None else 0,
                     len(self.queue),
                     sum(1 for r in self.active
-                        if r is not None and r.prefilling))
+                        if r is not None and r.prefilling),
+                    costs={p: (c.bytes, c.flops)
+                           for p, c in costs.items()})
 
     def _step_inner(self) -> int:
         tel = self.telemetry
@@ -973,6 +1002,12 @@ class ServingEngine:
         # Only live slots advance; released/empty slots stay parked at 0
         # (decode_step freezes zero-length slots on device too).
         self._host_len += mask
+        if self._shape is not None:
+            # Post-append resident lengths per live slot — what the
+            # decode attention just read through the block table.
+            self._shape.decode_ran = True
+            self._shape.decode_lens = [
+                int(x) for x, m in zip(self._host_len, mask) if m]
         self._decode_sec += time.perf_counter() - t_dec
         return int(mask.sum()) + n_prefilling + parked
 
@@ -1051,6 +1086,13 @@ class ServingEngine:
             tokens[i, 0] = t0
             tokens[i, 1:1 + len(drafts)] = drafts
             starts[i] = L
+            if self._shape is not None:
+                self._shape.verify.append((L, 1 + len(drafts)))
+                if self.spec.mode == "draft-model":
+                    # One draft forward per proposed token (the k-th
+                    # draft is free; catch-up forwards roughly cover
+                    # it — the weight stream is the dominant term).
+                    self._shape.draft_forwards += len(drafts)
             # Map pages for every candidate write (t0 + drafts); padded
             # positions past the drafts either land in the tail of an
             # already-mapped page (dead data past the rewind length) or
@@ -1208,4 +1250,36 @@ class ServingEngine:
             "swap_bytes_peak": self.swap_tier.bytes_peak,
             "pinned_pages": (self.allocator.pinned_pages
                              if self.paged else 0),
+            "roofline": self._roofline_stats(),
         }
+
+    def _roofline_stats(self) -> dict:
+        """Per-phase roofline summary over everything this engine has
+        run, from the always-on modeled-traffic accumulators and phase
+        wall-times: modeled bytes/FLOPs, achieved GB/s, arithmetic
+        intensity, and the memory/compute-bound classification against
+        the cost model's hardware spec. Phases that never ran are
+        omitted. The telemetry snapshot carries the windowed,
+        per-step-resolved version of the same numbers."""
+        sec = {"admit": self._admit_sec,
+               "chunk_prefill": self._chunk_sec,
+               "draft": self._draft_sec,
+               "verify": self._verify_sec,
+               "decode": self._decode_sec}
+        hw = self.cost_model.hardware
+        out = {}
+        for phase, nbytes in self._phase_bytes.items():
+            if nbytes <= 0.0:
+                continue
+            nflops = self._phase_flops[phase]
+            s = sec[phase]
+            intensity = nflops / nbytes
+            out[phase] = {
+                "modeled_bytes": nbytes,
+                "modeled_flops": nflops,
+                "sec": s,
+                "achieved_gbps": nbytes / s / 1e9 if s else 0.0,
+                "arithmetic_intensity": intensity,
+                "bound": hw.classify(intensity),
+            }
+        return out

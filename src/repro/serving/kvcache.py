@@ -135,6 +135,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import paged_attention as paged_k
 from repro.serving.quantize import quantize_vec, quantize_vec_int4
 from repro.serving.telemetry import NULL_TELEMETRY
 
@@ -185,20 +186,18 @@ _SCALE_DTYPES = ("float32", "bfloat16")
 def page_kv_bytes(cfg, page_size: int, kv_dtype: str = "model",
                   kv_scale_dtype: str = "float32") -> int:
     """HBM bytes one physical page costs (K + V, all layers, incl. the
-    int8 mode's scale rows). The allocator hands out pages by *count*;
-    this is the count -> bytes conversion admission byte budgets and the
-    benchmarks use."""
+    int8/int4 modes' scale rows). The allocator hands out pages by
+    *count*; this is the count -> bytes conversion admission byte
+    budgets, the benchmarks, and the roofline cost model use.
+
+    The per-vector math lives with the kernel whose DMA it describes
+    (`kernels/paged_attention.kv_vector_bytes`): fp pools move
+    Dh * itemsize(cdtype) bytes per (token, head) vector, int8 pools
+    (Dh + scale) and int4 pools (Dh/2 + scale); the factor 2 is K + V.
+    """
     unit = cfg.n_layers * cfg.n_kv_heads * page_size
-    if kv_dtype == "int8":
-        # payload + one scale per (token, head) vector: 4 B in f32,
-        # 2 B with kv_scale_dtype="bfloat16".
-        sc = jnp.dtype(kv_scale_dtype).itemsize
-        return 2 * unit * (cfg.head_dim * 1 + sc)
-    if kv_dtype == "int4":
-        # two nibbles per byte: Dh/2 payload bytes + one scale per vector.
-        sc = jnp.dtype(kv_scale_dtype).itemsize
-        return 2 * unit * (cfg.head_dim // 2 + sc)
-    return 2 * unit * cfg.head_dim * jnp.dtype(cfg.cdtype).itemsize
+    return 2 * unit * paged_k.kv_vector_bytes(
+        cfg.head_dim, kv_dtype, kv_scale_dtype, payload_dtype=cfg.cdtype)
 
 
 def init_paged_cache(cfg, batch: int, num_pages: int, page_size: int,

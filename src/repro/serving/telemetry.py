@@ -63,8 +63,13 @@ import time
 from typing import Optional
 
 # Version stamp for every exported artifact (bench JSON, snapshot,
-# Chrome trace metadata). Bump when a field changes meaning.
-SCHEMA_VERSION = 1
+# Chrome trace metadata). Bump when a field changes meaning or the
+# snapshot's key set changes (tests/test_telemetry.py locks the keys to
+# this number so exporters and the bench-regression checker can rely on
+# them). v2: snapshot gained the "roofline" section (costmodel.py),
+# bench part 5 re-based the spec-on/off ms/token fields on comparable
+# warmed end-to-end drains, and bench part 10's roofline_* keys landed.
+SCHEMA_VERSION = 2
 
 _NULL_CTX = contextlib.nullcontext()
 
@@ -276,11 +281,14 @@ class RequestTrace:
 
 # Per-step record field order (kept a plain tuple — one allocation per
 # step): (t_start, dur, admit, chunk, draft, verify, decode,
-#         pages_used, pages_free, headroom, queue_depth, prefilling)
+#         pages_used, pages_free, headroom, queue_depth, prefilling,
+#         phase_costs)
+# phase_costs is None or {phase: (modeled_bytes, modeled_flops)} from
+# the engine's cost model (serving/costmodel.py).
 _STEP_FIELDS = ("t_start", "dur_sec", "admit_sec", "chunk_prefill_sec",
                 "draft_sec", "verify_sec", "decode_sec", "pages_used",
                 "pages_free", "watermark_headroom", "queue_depth",
-                "slots_prefilling")
+                "slots_prefilling", "phase_costs")
 _PHASES = ("admit", "chunk_prefill", "draft", "verify", "decode")
 
 
@@ -303,6 +311,11 @@ class Telemetry:
         self.registry = MetricsRegistry()
         self.requests: dict[int, RequestTrace] = {}
         self.steps: list[tuple] = []
+        # Roofline state: static facts from the engine's cost model
+        # (attach_roofline) and per-phase [bytes, flops, sec] running
+        # sums over the window (record_step's `costs`).
+        self._roofline_static: Optional[dict] = None
+        self._roofline_acc: dict[str, list] = {}
         self._t0 = clock()
 
     def now(self) -> float:
@@ -409,17 +422,32 @@ class Telemetry:
             tr.finish_t = self.now()
         self.registry.counter("requests.finished").inc()
 
+    # -- roofline (serving/costmodel.py feeds this) ---------------------------
+    def attach_roofline(self, static: dict) -> None:
+        """Attach the cost model's static description (hardware spec,
+        bytes/vector table, weight stream, mesh division) — the engine
+        calls this once at construction so `snapshot()["roofline"]` can
+        report the model alongside the measured rates."""
+        if not self.enabled:
+            return
+        self._roofline_static = static
+
     # -- step records --------------------------------------------------------
     def record_step(self, t_start: float, dur: float, admit: float,
                     chunk: float, draft: float, verify: float,
                     decode: float, pages_used: int, pages_free: int,
-                    headroom: int, queue_depth: int,
-                    prefilling: int) -> None:
+                    headroom: int, queue_depth: int, prefilling: int,
+                    costs: Optional[dict] = None) -> None:
+        """One engine step's boundary record. `costs` (optional) is the
+        cost model's {phase: (modeled_bytes, modeled_flops)} for the
+        phases that ran this step; combined with the measured phase
+        wall-times it becomes the achieved-GB/s gauges and the windowed
+        roofline aggregates snapshot() reports."""
         if not self.enabled:
             return
         self.steps.append((t_start, dur, admit, chunk, draft, verify,
                            decode, pages_used, pages_free, headroom,
-                           queue_depth, prefilling))
+                           queue_depth, prefilling, costs))
         reg = self.registry
         reg.counter("engine.steps").inc()
         reg.gauge("pool.pages_used").set(pages_used)
@@ -428,6 +456,21 @@ class Telemetry:
         reg.gauge("queue.depth").set(queue_depth)
         reg.gauge("slots.prefilling").set(prefilling)
         reg.histogram("latency.step_sec").observe(dur)
+        if costs:
+            phase_sec = {"admit": admit, "chunk_prefill": chunk,
+                         "draft": draft, "verify": verify,
+                         "decode": decode}
+            for phase, (nbytes, nflops) in costs.items():
+                sec = phase_sec.get(phase, 0.0)
+                acc = self._roofline_acc.get(phase)
+                if acc is None:
+                    acc = self._roofline_acc[phase] = [0.0, 0.0, 0.0]
+                acc[0] += nbytes
+                acc[1] += nflops
+                acc[2] += sec
+                if sec > 0.0:
+                    reg.gauge(f"roofline.{phase}.achieved_gbps").set(
+                        nbytes / sec / 1e9)
 
     # -- jax.profiler integration -------------------------------------------
     def annotation(self, name: str):
@@ -500,7 +543,45 @@ class Telemetry:
         snap["scheduler"] = {k.split("sched.", 1)[1]: v
                              for k, v in counters.items()
                              if k.startswith("sched.")}
+        snap["roofline"] = self._roofline_snapshot()
         return snap
+
+    def _roofline_snapshot(self) -> dict:
+        """The roofline section: the cost model's static facts plus
+        windowed per-phase aggregates — modeled bytes/FLOPs against
+        measured phase seconds gives achieved GB/s, achieved GFLOP/s,
+        arithmetic intensity, bandwidth utilization against the
+        hardware roof, and the memory/compute-bound classification
+        (intensity vs the ridge point)."""
+        static = self._roofline_static or {}
+        hw = static.get("hardware") or {}
+        ridge = hw.get("ridge_flops_per_byte")
+        peak_bw = hw.get("peak_bytes_per_sec")
+        phases = {}
+        for phase in _PHASES:
+            acc = self._roofline_acc.get(phase)
+            if acc is None:
+                continue
+            nbytes, nflops, sec = acc
+            intensity = nflops / nbytes if nbytes else 0.0
+            phases[phase] = {
+                "bytes": nbytes,
+                "flops": nflops,
+                "sec": sec,
+                "achieved_gbps": nbytes / sec / 1e9 if sec else 0.0,
+                "achieved_gflops": nflops / sec / 1e9 if sec else 0.0,
+                "arithmetic_intensity": intensity,
+                "bw_utilization": (nbytes / sec / peak_bw
+                                   if sec and peak_bw else 0.0),
+                "bound": (None if ridge is None
+                          else "memory" if intensity < ridge
+                          else "compute"),
+            }
+        return {
+            "hardware": hw,
+            "model": {k: v for k, v in static.items() if k != "hardware"},
+            "phases": phases,
+        }
 
     def reset(self) -> None:
         """Start a new window: zero the registry, drop step records and
@@ -508,6 +589,7 @@ class Telemetry:
         spans that straddle the boundary stay well-formed."""
         self.registry.reset()
         self.steps.clear()
+        self._roofline_acc.clear()   # static description survives resets
         self.requests = {uid: tr for uid, tr in self.requests.items()
                          if tr.finish_t is None}
 
@@ -556,6 +638,20 @@ class Telemetry:
             ev.append({"ph": "C", "name": "queue", "pid": 0, "tid": 0,
                        "ts": ts(s[0]),
                        "args": {"depth": s[10], "prefilling": s[11]}})
+            costs = s[12] if len(s) > 12 else None
+            if costs:
+                # Achieved-bandwidth counter track: one series per phase
+                # that ran this step (modeled bytes over measured phase
+                # seconds), rendered as stacked counters in Perfetto.
+                phase_sec = dict(zip(_PHASES, s[2:7]))
+                args = {
+                    f"{phase}_gbps": round(nbytes / sec / 1e9, 3)
+                    for phase, (nbytes, _f) in sorted(costs.items())
+                    if (sec := phase_sec.get(phase, 0.0)) > 0.0}
+                if args:
+                    ev.append({"ph": "C", "name": "roofline_gbps",
+                               "pid": 0, "tid": 0, "ts": ts(s[0]),
+                               "args": args})
         for uid, tr in sorted(self.requests.items()):
             tid = uid  # uids start at 1; tid 0 is the engine timeline
             ev.append({"ph": "M", "name": "thread_name", "pid": 0,

@@ -13,7 +13,7 @@ import pytest
 from repro.configs import get_config
 from repro.core.salpim import SalPimConfig, SalPimEngine
 from repro.models import api
-from repro.serving.engine import GenConfig, ServingEngine
+from repro.serving.engine import EngineConfig, GenConfig, ServingEngine
 from repro.serving.telemetry import (
     SCHEMA_VERSION, Counter, Histogram, MetricsRegistry, Telemetry,
     bench_metadata, log_bucket_edges,
@@ -286,3 +286,50 @@ def test_bench_metadata_keys():
         assert k in meta, k
     assert meta["schema_version"] == SCHEMA_VERSION
     assert meta["jax_version"] == jax.__version__
+
+
+def test_snapshot_golden_keys():
+    """The snapshot schema is an external contract (CI artifacts, the
+    bench regression checker, dashboards): every top-level section and
+    the roofline section's shape are locked to SCHEMA_VERSION. Adding a
+    key means bumping the version here AND in telemetry.py — that bump
+    is what lets scripts/check_bench_regression.py tell a deliberate
+    schema change from an accidental field drop."""
+    assert SCHEMA_VERSION == 2
+    cfg, params = _setup()
+    tel = Telemetry(enabled=True, clock=_fake_clock(0.01))
+    eng = ServingEngine(params, cfg, ENGINE, EngineConfig(
+        slots=2, max_len=32, gen=GenConfig(stop_on_eos=False),
+        paged=True, page_size=8, prefill_chunk_tokens=8, telemetry=tel))
+    rng = np.random.RandomState(0)
+    for _ in range(2):
+        eng.submit(rng.randint(2, cfg.vocab, size=6), max_new_tokens=4)
+    steps = 0
+    while eng.queue or any(a is not None for a in eng.active):
+        eng.step()
+        steps += 1
+        assert steps < 200
+    snap = tel.snapshot()
+    assert set(snap) == {
+        "schema_version", "counters", "gauges", "histograms", "steps",
+        "pool", "requests", "prefix_cache", "admission", "scheduler",
+        "roofline",
+    }
+    roof = snap["roofline"]
+    assert set(roof) == {"hardware", "model", "phases"}
+    assert set(roof["hardware"]) == {
+        "name", "peak_flops", "peak_bytes_per_sec", "ridge_flops_per_byte"}
+    for k in ("kv_dtype", "kv_scale_dtype", "kv_bytes_per_vector",
+              "kv_bytes_per_token", "page_size", "page_bytes",
+              "weight_stream_bytes", "draft_stream_bytes",
+              "tensor_parallel", "gather_bytes_per_token", "model"):
+        assert k in roof["model"], k
+    assert roof["phases"], "no phase ran costs"
+    for phase, row in roof["phases"].items():
+        assert set(row) == {
+            "bytes", "flops", "sec", "achieved_gbps", "achieved_gflops",
+            "arithmetic_intensity", "bw_utilization", "bound",
+        }, phase
+    # Roofline achieved-bandwidth gauges land in the registry too.
+    assert any(k.startswith("roofline.") and k.endswith(".achieved_gbps")
+               for k in snap["gauges"])
